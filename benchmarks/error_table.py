@@ -1,0 +1,79 @@
+"""Paper Table 1 reproduction: max abs/rel roundtrip error of iFSOFT then
+FSOFT over random coefficients (Re, Im ~ U[-1,1]), averaged over runs.
+
+Paper's numbers (f80 on x86): B=32: 1.10e-14 abs / 7.91e-13 rel;
+B=64: 2.79e-14 / 3.08e-12; B=128: 6.23e-14 / 1.89e-11.
+Ours run in f64 (DESIGN.md Sec. 8 precision ladder) -- same magnitudes are
+expected and observed; the f32 device-path error is measured alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import batched, soft
+
+
+def roundtrip(plan, B, seed, dtype=np.complex128):
+    fhat = soft.random_coeffs(B, seed).astype(dtype)
+    f = batched.inverse_clustered(plan, fhat)
+    back = np.asarray(batched.forward_clustered(plan, f))
+    mask = soft.coeff_mask(B)
+    err = np.abs(back - fhat)[mask]
+    ref = np.abs(np.asarray(fhat))[mask]
+    return err.max(), (err / np.maximum(ref, 1e-300)).max()
+
+
+def run(bandwidths=(16, 32, 64), runs=3, fast=False):
+    import jax.numpy as jnp
+    rows = []
+    if fast:
+        bandwidths, runs = (16, 32), 2
+    for B in bandwidths:
+        t0 = time.time()
+        plan = batched.build_plan(B, dtype=jnp.float64)
+        t_plan = time.time() - t0
+        abss, rels = [], []
+        t0 = time.time()
+        for s in range(runs):
+            a, r = roundtrip(plan, B, seed=s)
+            abss.append(a)
+            rels.append(r)
+        t_rt = (time.time() - t0) / runs
+        rows.append({
+            "B": B,
+            "abs_err_mean": float(np.mean(abss)),
+            "abs_err_std": float(np.std(abss)),
+            "rel_err_mean": float(np.mean(rels)),
+            "rel_err_std": float(np.std(rels)),
+            "plan_s": t_plan, "roundtrip_s": t_rt,
+        })
+        # f32 device path at the smallest bandwidth (precision ladder)
+        if B == bandwidths[0]:
+            plan32 = batched.build_plan(B, dtype=jnp.float32)
+            a32, r32 = roundtrip(plan32, B, 0, dtype=np.complex64)
+            rows.append({"B": B, "dtype": "f32",
+                         "abs_err_mean": float(a32),
+                         "rel_err_mean": float(r32)})
+    return rows
+
+
+PAPER = {32: (1.10e-14, 7.91e-13), 64: (2.79e-14, 3.08e-12),
+         128: (6.23e-14, 1.89e-11)}
+
+
+def main(fast=False):
+    rows = run(fast=fast)
+    print("# error_table (paper Table 1)")
+    print("B,dtype,abs_err,rel_err,paper_abs,paper_rel,roundtrip_s")
+    for r in rows:
+        dt = r.get("dtype", "f64")
+        pa, pr = PAPER.get(r["B"], (float("nan"),) * 2)
+        print(f"{r['B']},{dt},{r['abs_err_mean']:.2e},{r['rel_err_mean']:.2e},"
+              f"{pa:.2e},{pr:.2e},{r.get('roundtrip_s', 0):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from artifacts/dryrun/*.json:
+
+    compute term    = FLOPs_per_device / peak_FLOPs
+    memory term     = HBM bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Hardware model: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (constants from the assignment).  FLOPs use the loop-aware analytic
+count (launch/flops.py); bytes use cost_analysis with the proportional
+loop correction (launch/dryrun.py); collective bytes come from the HLO
+parse with while-trip multipliers (launch/hlo.py).
+
+MODEL_FLOPS reference: 6*N*D (dense) / 6*N_active*D (MoE) for train cells
+(D = tokens); 2*N*D for prefill; 2*N_active per token for decode.  The
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat + masked-attention overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+
+def model_flops(cell):
+    if cell.get("kind") == "soft":
+        B = cell["bandwidth"]
+        # useful DWT work: 2 ops per (cluster, l, j, member-col) over the
+        # true l-extents = sum_k members*(B - m_k)*2B*2*2(ri)
+        # ~ (8/3) B^4 * 4; plus the 2D FFTs: 5 (2B)^3 log2(4B^2)
+        import math
+        dwt = (8.0 / 3.0) * B**4 * 4
+        fft = 5 * (2 * B) ** 3 * math.log2(2 * B) * 2
+        return dwt + fft
+    n = cell["active_params"]
+    if cell["kind"] == "train":
+        return 6.0 * n * cell["tokens"]
+    if cell["kind"] == "prefill":
+        return 2.0 * n * cell["tokens"]
+    return 2.0 * n * cell["global_batch"]  # decode: one token per seq
+
+
+def analyze_cell(cell):
+    dev = cell["devices"]
+    flops_dev = cell.get("flops_analytic_per_device") or \
+        cell["flops_per_device"]
+    bytes_dev = (cell.get("bytes_analytic_per_device")
+                 or cell.get("bytes_corrected_per_device")
+                 or cell["bytes_accessed_per_device"])
+    coll_dev = cell["collectives"]["total"]
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell)
+    hlo_global = flops_dev * dev
+    bound = max(terms.values())
+    return {
+        **{k: cell.get(k) for k in ("arch", "shape", "mesh", "kind",
+                                    "devices")},
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # achievable MFU bound given the dominant term
+        "mfu_bound": (mf / dev / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_gb": cell["memory"]["temp_gb"],
+        "fits_16gb": (cell["memory"]["temp_gb"]
+                      + cell["memory"]["argument_gb"]) < 16.0,
+    }
+
+
+def load_cells(art_dir="artifacts/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(art_dir="artifacts/dryrun", mesh=None):
+    rows = [analyze_cell(c) for c in load_cells(art_dir)]
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    return rows
+
+
+def main(art_dir="artifacts/dryrun"):
+    rows = table(art_dir)
+    if not rows:
+        print("# roofline: no artifacts found (run launch/dryrun first)")
+        return []
+    print("# roofline (v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s link)")
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,mfu_bound,temp_gb,fits_16gb")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['mfu_bound']:.3f},"
+              f"{r['temp_gb']:.1f},{int(r['fits_16gb'])}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Benchmark driver: one section per paper table/figure + framework extras.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--section NAME]
+
+Sections:
+  error_table      paper Table 1 (roundtrip error, f64 + f32 ladder)
+  workbalance      paper Figs 2-4 analog (schedule speedup bounds)
+  soft_runtime     measured 1-core runtime (sequential vs clustered)
+  kernel_schedule  folded-attention / ragged-DWT grid savings
+  lm_step          reduced-config LM train/decode step timings
+  roofline         per-cell roofline terms from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def lm_step(fast=False):
+    """Reduced-config step timings across the assigned architectures."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models import lm
+
+    archs = ("smollm-135m", "rwkv6-3b", "olmoe-1b-7b") if fast else \
+        configs.ARCH_NAMES
+    print("# lm_step (reduced configs, 1-core CPU)")
+    print("arch,train_ms,decode_ms")
+    rows = []
+    for arch in archs:
+        cfg = configs.reduced(arch)
+        params = lm.init(cfg, jax.random.key(0))
+        rng = np.random.default_rng(0)
+        B, S = 2, 64
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (B, S)), jnp.int32)}
+        if cfg.embed_inputs:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)) * 0.02, jnp.float32)
+        else:
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        if cfg.pos_type == "mrope":
+            batch["positions"] = jnp.asarray(
+                np.tile(np.arange(S, dtype=np.int32), (3, B, 1)))
+
+        gfn = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, cfg, b)))
+        gfn(params, batch)
+        t0 = time.time()
+        jax.block_until_ready(gfn(params, batch))
+        t_train = (time.time() - t0) * 1e3
+
+        states = lm.state_init(cfg, B, S)
+        step_in = {k: (v[:, :1] if k != "positions" else v[:, :, :1])
+                   for k, v in batch.items() if k != "labels"}
+        dfn = jax.jit(lambda p, b, st: lm.decode_step(p, cfg, b, st,
+                                                      jnp.int32(0)))
+        dfn(params, step_in, states)
+        t0 = time.time()
+        jax.block_until_ready(dfn(params, step_in, states)[0])
+        t_dec = (time.time() - t0) * 1e3
+        print(f"{arch},{t_train:.1f},{t_dec:.1f}")
+        rows.append((arch, t_train, t_dec))
+    return rows
+
+
+SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
+            "lm_step", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--section", default=None, choices=SECTIONS)
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    import jax
+    jax.config.update("jax_enable_x64", True)  # error tables need f64
+
+    wanted = [args.section] if args.section else list(SECTIONS)
+    t_all = time.time()
+    for name in wanted:
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        if name == "error_table":
+            from benchmarks import error_table
+            error_table.main(fast=args.fast)
+        elif name == "workbalance":
+            from benchmarks import workbalance
+            workbalance.main(fast=args.fast)
+        elif name == "soft_runtime":
+            from benchmarks import soft_runtime
+            soft_runtime.main(fast=args.fast)
+        elif name == "kernel_schedule":
+            from benchmarks import kernel_schedule
+            kernel_schedule.main(fast=args.fast)
+        elif name == "lm_step":
+            lm_step(fast=args.fast)
+        elif name == "roofline":
+            from benchmarks import roofline
+            roofline.main(args.artifacts)
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+    print(f"\ntotal {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

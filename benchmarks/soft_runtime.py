@@ -1,0 +1,98 @@
+"""Measured runtime (paper Fig. 3 analog, single CPU core).
+
+Compares three executions of the full FSOFT at increasing bandwidth:
+  * `sequential` -- per-cluster Python loop over DWT matvecs (the paper's
+    sequential baseline structure);
+  * `clustered`  -- our batched single-contraction formulation (the
+    TPU-native agglomeration; on 1 CPU core its speedup over `sequential`
+    isolates the *batching/agglomeration* win, no parallelism involved);
+  * `dense`      -- the dense-table einsum reference.
+
+Wall-clock on this container's single core; the multi-node speedup claim is
+covered structurally by workbalance.py and the dry-run collectives.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched, quadrature, soft, wigner
+
+
+def _time(f, *a, reps=3):
+    f(*a)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        r = f(*a)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / reps
+
+
+def sequential_forward(plan, fhat_dense, f):
+    """Per-cluster loop (numpy, f64) mirroring the paper's sequential DWT."""
+    B = plan.B
+    S = np.asarray(batched.fft_analysis(f))
+    w = np.asarray(plan.w)
+    d = np.asarray(plan.d)
+    tab = plan.table
+    out = np.zeros_like(fhat_dense)
+    scale = (2 * np.arange(B) + 1) / (8 * np.pi * B)
+    parity = (-1.0) ** np.arange(B)
+    for k in range(tab.n_clusters):
+        blk = d[k]                      # (L, J)
+        for c in range(8):
+            s = tab.sign[k, c]
+            if s == 0:
+                continue
+            col = S[tab.gather_m[k, c], :, tab.gather_mp[k, c]]
+            if tab.reflected[k, c]:
+                col = col[::-1]
+            res = blk @ (w * s * col)
+            if tab.reflected[k, c]:
+                res = res * parity
+            out[:, tab.scatter_m[k, c], tab.scatter_mp[k, c]] = res * scale
+    return out[:, : 2 * B - 1, : 2 * B - 1]
+
+
+def run(bandwidths=(8, 16, 24, 32), fast=False):
+    if fast:
+        bandwidths = (8, 16)
+    rows = []
+    for B in bandwidths:
+        plan = batched.build_plan(B, dtype=jnp.float64)
+        fhat = soft.random_coeffs(B, 0)
+        f = np.asarray(batched.inverse_clustered(plan, fhat))
+        buf = np.zeros((B, 2 * B, 2 * B), complex)
+
+        t_seq = _time(lambda: sequential_forward(plan, buf, f), reps=1)
+        fj = jnp.asarray(f)
+        t_clu = _time(lambda: batched.forward_clustered(plan, fj))
+        d_table = wigner.wigner_d_table(B)
+        t_dense = _time(lambda: soft.forward_soft(fj, B, d_table))
+
+        # correctness cross-check while we are here
+        a = sequential_forward(plan, buf, f)
+        b = np.asarray(batched.forward_clustered(plan, fj))
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-10)
+
+        rows.append({"B": B, "sequential_s": t_seq, "clustered_s": t_clu,
+                     "dense_s": t_dense,
+                     "agglomeration_speedup": t_seq / t_clu})
+    return rows
+
+
+def main(fast=False):
+    rows = run(fast=fast)
+    print("# soft_runtime (1-core wall time; agglomeration win)")
+    print("B,sequential_s,clustered_s,dense_s,agglomeration_speedup")
+    for r in rows:
+        print(f"{r['B']},{r['sequential_s']:.4f},{r['clustered_s']:.4f},"
+              f"{r['dense_s']:.4f},{r['agglomeration_speedup']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Figs. 2-4 analog: speedup/efficiency of the parallel DWT stage.
+
+Without TPU hardware, speedup is bounded by static work balance:
+    speedup(n) = total_work / max_shard_work(n)
+measured on the REAL per-cluster work profile (members x l-extent from the
+cluster table).  We evaluate the paper's kappa ordering (contiguous and
+strided assignment) and our sorted round-robin (`balanced_order`) for
+n = 2..64 nodes and the paper's bandwidths -- this is the scheduling claim
+of the paper made measurable without wall clocks, plus the measured
+imbalance penalty the SPMD port would pay without the fold/reorder.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import clusters, indexing
+
+
+def work_profile(B):
+    tab = clusters.build_cluster_table(B)
+    return tab.work().astype(np.int64)
+
+
+def speedup(work, n, schedule):
+    if schedule == "contiguous":
+        bounds = np.linspace(0, len(work), n + 1).astype(int)
+        shard = [work[bounds[i]:bounds[i + 1]].sum() for i in range(n)]
+    elif schedule == "strided":
+        shard = [work[i::n].sum() for i in range(n)]
+    elif schedule == "balanced":
+        perm = indexing.balanced_order(work, n)
+        shard = [work[perm[i::n]].sum() for i in range(n)]
+    else:
+        raise ValueError(schedule)
+    mx = max(shard)
+    return work.sum() / mx if mx else float(n)
+
+
+def run(bandwidths=(32, 64, 128, 256, 512), nodes=(2, 4, 8, 16, 32, 64),
+        fast=False):
+    if fast:
+        bandwidths = (32, 128, 512)
+    rows = []
+    for B in bandwidths:
+        w = work_profile(B)
+        for n in nodes:
+            row = {"B": B, "n": n}
+            for s in ("contiguous", "strided", "balanced"):
+                sp = speedup(w, n, s)
+                row[s] = sp
+                row[s + "_eff"] = sp / n
+            rows.append(row)
+    return rows
+
+
+def main(fast=False):
+    rows = run(fast=fast)
+    print("# workbalance (paper Figs 2-4 analog: speedup bound by schedule)")
+    print("B,n,contiguous,strided,balanced,balanced_efficiency")
+    for r in rows:
+        print(f"{r['B']},{r['n']},{r['contiguous']:.2f},{r['strided']:.2f},"
+              f"{r['balanced']:.2f},{r['balanced_eff']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

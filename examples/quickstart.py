@@ -1,0 +1,60 @@
+"""Quickstart: the SO(3) FFT in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py [--bandwidth 16]
+
+Walks the public API end to end: build a plan, synthesize a random
+bandlimited function on the Euler grid (iFSOFT), analyze it back (FSOFT),
+verify roundtrip error at paper-Table-1 magnitudes, then swap the DWT stage
+for the Pallas kernel (interpret mode on CPU) and check it agrees.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from repro.core import batched, soft
+from repro.kernels import ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bandwidth", type=int, default=16)
+    args = ap.parse_args()
+    B = args.bandwidth
+
+    print(f"== SO(3) FFT quickstart, bandwidth B={B} ==")
+    print(f"coefficients: {soft.coeff_count(B)}   "
+          f"grid: {2 * B}^3 = {(2 * B) ** 3} samples")
+
+    t0 = time.time()
+    plan = batched.build_plan(B, dtype=jnp.float64)
+    print(f"plan built in {time.time() - t0:.2f}s "
+          f"({plan.n_clusters} symmetry clusters, "
+          f"{plan.table.n_regular} regular kappa-ordered)")
+
+    fhat = soft.random_coeffs(B, seed=0)
+    f = batched.inverse_clustered(plan, fhat)          # iFSOFT
+    back = batched.forward_clustered(plan, f)          # FSOFT
+    mask = soft.coeff_mask(B)
+    err = np.abs(np.asarray(back) - fhat)[mask].max()
+    print(f"roundtrip max abs error: {err:.2e}  (paper Table 1: ~1e-14)")
+    assert err < 1e-12
+
+    # same transform, DWT stage on the Pallas kernel (interpret mode on CPU)
+    dwt_fn = ops.make_dwt_fn(plan, "dense", tk=4, tl=min(B, 16), tj=2 * B)
+    back_k = batched.forward_clustered(plan, f, dwt_fn=dwt_fn)
+    kerr = np.abs(np.asarray(back_k) - np.asarray(back)).max()
+    print(f"pallas DWT kernel vs reference: {kerr:.2e}")
+    assert kerr < 1e-12
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Batched serving example: prefill + autoregressive decode (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b
+    PYTHONPATH=src python examples/serve_lm.py --arch musicgen-medium
+
+Runs the reduced config of any assigned architecture: builds a random
+prompt batch (or stub frame-embeddings for the audio/vlm archs), prefills
+the decode state, then streams tokens.  Exercises every mixer's decode
+path (KV cache ring buffer, RG-LRU state, RWKV-6 matrix state) -- the same
+`lm.decode_step` the decode_* dry-run cells lower at production shape.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=configs.ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch)
+    params = lm.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, S, T = args.batch, args.prompt_len, args.tokens
+    max_len = S + T
+
+    batch = {}
+    if cfg.embed_inputs:  # audio/vlm: stubbed frontend embeddings
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)) * 0.02, jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.pos_type == "mrope":
+        batch["positions"] = jnp.asarray(
+            np.tile(np.arange(S, dtype=np.int32), (3, B, 1)))
+
+    t0 = time.time()
+    logits, states = jax.jit(
+        lambda p, b: lm.prefill(p, cfg, b, max_len))(params, batch)
+    print(f"prefill {B}x{S}: {time.time() - t0:.2f}s "
+          f"(logits {logits.shape})")
+
+    step_fn = jax.jit(
+        lambda p, b, st, q: lm.decode_step(p, cfg, b, st, q))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    emb_table = params["embed"]
+    t0 = time.time()
+    for i in range(T):
+        step = {}
+        if cfg.embed_inputs:  # feed the generated token's embedding back
+            step["embeds"] = emb_table[tok][:, None].astype(jnp.float32)
+        else:
+            step["tokens"] = tok[:, None]
+        logits, states = step_fn(params, step, states, jnp.int32(S + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"decoded {T} steps in {dt:.2f}s ({B * T / dt:.0f} tok/s)")
+    print("sample ids:", gen[0][:16])
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

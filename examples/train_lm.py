@@ -1,0 +1,89 @@
+"""End-to-end LM training driver (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset full --steps 3
+
+Presets:
+  tiny -- ~8M-param smollm-family model, a few hundred steps in minutes on
+          this CPU container (loss decreases from ~ln(V) as it learns the
+          synthetic unigram+EOS structure);
+  full -- the real smollm-135m (the assignment's ~100M-class model); on
+          CPU each step is tens of seconds, so default steps are few --
+          on a TPU pod the same driver runs via repro.launch.train.
+
+Features on display: deterministic sharded data pipeline, AdamW + cosine
+schedule, grad clipping, async atomic checkpointing with restart-on-NaN,
+metric history.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro import configs
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+
+
+def preset_cfg(name):
+    if name == "full":
+        cfg = configs.get("smollm-135m")
+        return dataclasses.replace(cfg, param_dtype="float32",
+                                   compute_dtype="float32")
+    cfg = configs.reduced("smollm-135m")
+    return dataclasses.replace(cfg, num_layers=4, d_model=128, num_heads=4,
+                               num_kv_heads=2, head_dim=32, d_ff=512,
+                               vocab_size=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("tiny", "full"), default="tiny")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    steps = args.steps or (300 if args.preset == "tiny" else 3)
+    seq = args.seq_len or (128 if args.preset == "tiny" else 512)
+    cfg = preset_cfg(args.preset)
+    from repro.models import lm
+    print(f"preset={args.preset}: {lm.count_params(cfg) / 1e6:.1f}M params, "
+          f"{steps} steps @ batch {args.global_batch} x seq {seq}")
+
+    tcfg = TrainConfig(
+        steps=steps, ckpt_every=max(steps // 3, 25),
+        ckpt_dir=args.ckpt_dir,
+        opt=OptConfig(peak_lr=1e-3 if args.preset == "tiny" else 3e-4,
+                      warmup_steps=max(steps // 10, 5), decay_steps=steps))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=args.global_batch))
+    trainer = Trainer(cfg, tcfg, data)
+    t0 = time.time()
+    trainer.run()
+    dt = time.time() - t0
+
+    losses = [h for h in trainer.history if "loss" in h]
+    for h in losses[:: max(len(losses) // 12, 1)]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f}")
+    print(f"final loss {losses[-1]['loss']:.4f} (start "
+          f"{losses[0]['loss']:.4f}) in {dt:.0f}s "
+          f"({dt / len(losses):.2f}s/step)")
+    if steps >= 50:  # too few steps to clear warmup otherwise
+        first = sum(h["loss"] for h in losses[:10]) / 10
+        last = sum(h["loss"] for h in losses[-10:]) / 10
+        assert last < first, (first, last)
+        print("OK: loss decreased")
+    else:
+        print("OK: ran (too few steps to assert loss decrease)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (save_checkpoint, load_checkpoint, latest_step,
+                         AsyncCheckpointer, restore_with_shardings)  # noqa

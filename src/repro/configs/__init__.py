@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from . import (glm4_9b, gemma_7b, llama4_maverick_400b_a17b, musicgen_medium,
+               nemotron_4_340b, olmoe_1b_7b, qwen2_vl_7b,
+               recurrentgemma_9b, rwkv6_3b, smollm_135m, soft)
+from .base import (ArchConfig, MoEConfig, ShapeConfig, LM_SHAPES,
+                   shapes_for, sub_quadratic)
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "musicgen-medium": musicgen_medium,
+    "smollm-135m": smollm_135m,
+    "glm4-9b": glm4_9b,
+    "gemma-7b": gemma_7b,
+    "nemotron-4-340b": nemotron_4_340b,
+    "rwkv6-3b": rwkv6_3b,
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+SOFT_CONFIGS = soft.CONFIGS
+
+
+def get(name: str) -> ArchConfig:
+    return _MODULES[name].CONFIG
+
+
+def reduced(name: str) -> ArchConfig:
+    return _MODULES[name].reduced()

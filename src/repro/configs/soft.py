@@ -1,0 +1,23 @@
+"""The paper's own workload: SO(3) FFT configurations.
+
+Bandwidths match the paper's benchmark (Sec. 4): B in {32, 64, 128, 256,
+512}.  B = 512 is the accuracy- and memory-critical case the paper runs
+first (0.37 TB f64 Wigner table; we shard it over the mesh -- DESIGN.md).
+These rows flow through the same dry-run / roofline machinery as the LM
+architectures (EXPERIMENTS.md rows soft_bXXX).
+"""
+import dataclasses
+
+PAPER_BANDWIDTHS = (32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftConfig:
+    name: str
+    bandwidth: int
+    dtype: str = "float32"       # device path; f64 on host for error tables
+    batch: int = 1               # simultaneous transforms (rot. matching)
+
+
+CONFIGS = {f"soft_b{B}": SoftConfig(name=f"soft_b{B}", bandwidth=B)
+           for B in PAPER_BANDWIDTHS}

@@ -1,0 +1,3 @@
+"""Core library: the paper's contribution -- fast Fourier transforms on SO(3)
+and their work-optimal parallelization (Lux, Wuelker & Chirikjian 2018)."""
+from . import batched, clusters, indexing, quadrature, soft, wigner  # noqa: F401

@@ -1,0 +1,337 @@
+"""Clustered / batched FSOFT & iFSOFT -- the TPU-native formulation.
+
+This module reshapes the paper's parallel design into dense array programs:
+the whole DWT stage (all clusters) becomes ONE batched contraction
+
+    forward :  out[k, l, c] = sum_j  d[k, l, j] * rhs[k, j, c]
+    inverse :  g[k, j, c]   = sum_l  d[k, l, j] * lhs[k, l, c]
+
+where k runs over symmetry clusters (paper's work packages, kappa-ordered),
+c over the <= 8 cluster members, and d is the fundamental-domain Wigner
+table.  Gather/scatter/sign metadata comes from :mod:`clusters`.
+
+The same plan drives
+  * the pure-jnp path below (runs anywhere, differentiable),
+  * the shard_map-distributed path (:mod:`parallel`) -- shard over k,
+  * the Pallas DWT kernel (:mod:`repro.kernels.dwt`) -- grid over k/l tiles.
+
+Complex arithmetic is carried as a trailing real/imag axis so the heavy
+contraction is a real matmul (MXU-friendly; complex einsum would promote the
+real Wigner operand and double the FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import clusters as clusters_mod
+from . import quadrature, soft, wigner
+
+__all__ = ["SoftPlan", "build_plan", "forward_clustered", "inverse_clustered"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SoftPlan:
+    """Device-ready tables for the clustered transforms.
+
+    All arrays are jnp; shapes use K = #clusters (padded to `pad_to` if
+    given), L = B, J = 2B, C = 8 member slots.
+    """
+
+    B: int
+    table: clusters_mod.ClusterTable        # host metadata (numpy)
+    d: jnp.ndarray          # (K, L, J)  fundamental Wigner blocks
+    gather_m: jnp.ndarray   # (K, C) int32  FFT bins
+    gather_mp: jnp.ndarray  # (K, C)
+    scatter_m: jnp.ndarray  # (K, C) int32  dense-layout bins (trash = 2B-1)
+    scatter_mp: jnp.ndarray # (K, C)
+    sign: jnp.ndarray       # (K, C) f32    0 marks unused slots
+    reflected: jnp.ndarray  # (K, C) bool
+    w: jnp.ndarray          # (J,)   quadrature weights
+    scale: jnp.ndarray      # (L,)   (2l+1)/(8 pi B)
+    parity: jnp.ndarray     # (L,)   (-1)^l
+    n_padded: int           # K after padding
+
+    @property
+    def n_clusters(self) -> int:
+        return self.table.n_clusters
+
+
+_PLAN_LEAVES = ("d", "gather_m", "gather_mp", "scatter_m", "scatter_mp",
+                "sign", "reflected", "w", "scale", "parity")
+
+
+def _plan_flatten(p: SoftPlan):
+    return tuple(getattr(p, n) for n in _PLAN_LEAVES), (p.B, p.table, p.n_padded)
+
+
+def _plan_unflatten(aux, leaves):
+    B, table, n_padded = aux
+    return SoftPlan(B=B, table=table, n_padded=n_padded,
+                    **dict(zip(_PLAN_LEAVES, leaves)))
+
+
+jax.tree_util.register_pytree_node(SoftPlan, _plan_flatten, _plan_unflatten)
+
+
+def shard_balanced_order(l_start: np.ndarray, n_shards: int) -> np.ndarray:
+    """Cluster permutation so that contiguous 1/n-th blocks (what shard_map
+    hands each device) are (a) work-balanced ACROSS shards and (b)
+    extent-sorted WITHIN each shard.
+
+    Deal the extent-sorted clusters round-robin (paper-P3's balanced static
+    schedule, cf. indexing.balanced_order) and lay shard s's hand out as
+    global block s: sorted[s::n] is itself descending in work, so every
+    local block supports bucketed l-truncation (make_bucketed_dwt_fn)."""
+    work_sorted = np.argsort(l_start, kind="stable")  # ascending m = desc work
+    return np.concatenate([work_sorted[s::n_shards]
+                           for s in range(n_shards)]).astype(np.int64)
+
+
+def build_plan(B: int, dtype=jnp.float64, pad_to: int | None = None,
+               order: np.ndarray | None = None) -> SoftPlan:
+    """Precompute the clustered-DWT plan (paper: 'precomputation of the
+    matrices using the three-term recurrence').
+
+    pad_to: pad the cluster axis to a multiple (for even mesh sharding);
+    padded rows have sign 0 everywhere and a zero Wigner block.
+    order: optional cluster permutation (see shard_balanced_order).
+    """
+    tab = clusters_mod.build_cluster_table(B)
+    if order is not None:
+        tab = _permute_table(tab, np.asarray(order))
+    fund, _ = wigner.wigner_d_fundamental(B)          # (P, L, J) f64
+    d = fund[tab.fund_row]                            # (K, L, J) cluster order
+
+    K = tab.n_clusters
+    Kp = K if pad_to is None else ((K + pad_to - 1) // pad_to) * pad_to
+
+    def padk(x, fill=0):
+        if Kp == len(x):
+            return x
+        pad = np.full((Kp - len(x),) + x.shape[1:], fill, dtype=x.dtype)
+        return np.concatenate([x, pad], axis=0)
+
+    trash = 2 * B - 1
+    return SoftPlan(
+        B=B,
+        table=tab,
+        d=jnp.asarray(padk(d), dtype=dtype),
+        gather_m=jnp.asarray(padk(tab.gather_m)),
+        gather_mp=jnp.asarray(padk(tab.gather_mp)),
+        scatter_m=jnp.asarray(padk(tab.scatter_m, fill=trash)),
+        scatter_mp=jnp.asarray(padk(tab.scatter_mp, fill=trash)),
+        sign=jnp.asarray(padk(tab.sign)).astype(dtype),
+        reflected=jnp.asarray(padk(tab.reflected)),
+        w=jnp.asarray(quadrature.weights(B), dtype=dtype),
+        scale=jnp.asarray((2 * np.arange(B) + 1) / (8 * np.pi * B), dtype=dtype),
+        parity=jnp.asarray((-1.0) ** np.arange(B), dtype=dtype),
+        n_padded=Kp,
+    )
+
+
+def _permute_table(tab, perm):
+    """Reorder every per-cluster array of a ClusterTable."""
+    import dataclasses as _dc
+    kw = {}
+    for f in _dc.fields(tab):
+        v = getattr(tab, f.name)
+        kw[f.name] = v[perm] if isinstance(v, np.ndarray) and \
+            v.ndim >= 1 and len(v) == tab.n_clusters else v
+    return clusters_mod.ClusterTable(**kw)
+
+
+def bucket_boundaries_from_lstart(l_start: np.ndarray, n_shards: int,
+                                  n_buckets: int):
+    """Static (k0, k1, l0) LOCAL bucket slices for the bucketed DWT.
+
+    l_start: (Kp,) per-cluster first valid degree in the (padded, permuted)
+    global order.  Requires shard_balanced_order: every contiguous Kp/n
+    block is extent-sorted, so boundaries computed at LOCAL offsets are
+    valid for every shard simultaneously (l0 = min over shards)."""
+    K = len(l_start)
+    kloc = K // n_shards
+    per_shard = np.asarray(l_start).reshape(n_shards, kloc)
+    bounds = np.linspace(0, kloc, n_buckets + 1).astype(int)
+    out = []
+    for i in range(n_buckets):
+        k0, k1 = int(bounds[i]), int(bounds[i + 1])
+        if k0 == k1:
+            continue
+        l0 = int(per_shard[:, k0:k1].min())
+        out.append((k0, k1, l0))
+    return out
+
+
+def plan_lstart(plan: SoftPlan) -> np.ndarray:
+    """(Kp,) l-start per cluster.  Padded rows get B-1 (their Wigner blocks
+    are zero, so any l0 is correct; B-1 maximizes bucket truncation)."""
+    l_start = np.full(plan.n_padded, plan.B - 1, np.int32)
+    l_start[: plan.n_clusters] = plan.table.rep[:, 0]
+    return l_start
+
+
+def bucket_boundaries(plan: SoftPlan, n_shards: int, n_buckets: int):
+    return bucket_boundaries_from_lstart(plan_lstart(plan), n_shards,
+                                         n_buckets)
+
+
+def make_bucketed_dwt_fn(plan: SoftPlan, n_shards: int = 1, n_buckets: int = 8):
+    """dwt_fn with static l-truncation per extent bucket (paper P3 ragged
+    tiling as pure jnp): each bucket contracts only l >= l0 rows, skipping
+    the zero triangle (~2.4x fewer FLOPs and d-table bytes at B = 512)."""
+    slices = bucket_boundaries(plan, n_shards, n_buckets)
+    kloc = plan.n_padded // n_shards
+
+    def fn(p: SoftPlan, rhs):
+        # operate per shard-block so slices line up (n_shards=1: one block)
+        K, J, C, _ = rhs.shape
+        rhs2 = rhs.reshape(n_shards, kloc, J, C * 2)
+        d3 = p.d.reshape(n_shards, kloc, p.d.shape[1], J)
+        outs = []
+        for (k0, k1, l0) in slices:
+            o = jnp.einsum("sklj,skjc->sklc", d3[:, k0:k1, l0:, :],
+                           rhs2[:, k0:k1], preferred_element_type=p.d.dtype)
+            o = jnp.pad(o, ((0, 0), (0, 0), (l0, 0), (0, 0)))
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1).reshape(K, -1, C, 2)
+        return out
+
+    return fn
+
+def fft_analysis(f):
+    """Samples (2B, 2B, 2B) -> S[mbin, j, m'bin]: (2B)^2 * ifft2."""
+    n = f.shape[0]
+    return (n * n) * jnp.fft.ifft(jnp.fft.ifft(f, axis=0), axis=2)
+
+
+def fft_synthesis(gbin):
+    """g bins (2B, 2B, 2B) -> samples: unnormalized forward fft2."""
+    return jnp.fft.fft(jnp.fft.fft(gbin, axis=0), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# stage 2: clustered DWT (forward) / iDWT (inverse)
+# ---------------------------------------------------------------------------
+
+def _gather_rhs(plan: SoftPlan, S):
+    """Build rhs[k, j, c, ri] from S[mbin, j, m'bin] (complex).
+
+    rhs column c of cluster k = sign * w * S(member), with j reversed for
+    beta-reflected members.
+    """
+    # S gathered at member bins: (K, C, J) complex
+    Sm = S[plan.gather_m, :, plan.gather_mp]
+    Sm = jnp.where(plan.reflected[..., None], Sm[..., ::-1], Sm)
+    Sm = Sm * (plan.sign[..., None] * plan.w[None, None, :])
+    rhs = jnp.stack([Sm.real, Sm.imag], axis=-1)     # (K, C, J, 2)
+    return jnp.swapaxes(rhs, 1, 2)                    # (K, J, C, 2)
+
+
+def dwt_apply(plan: SoftPlan, rhs):
+    """The clustered DWT contraction: (K,L,J) x (K,J,C,2) -> (K,L,C,2).
+
+    Kept as its own function: this is the compute hot-spot the Pallas kernel
+    (kernels/dwt.py) replaces 1:1.
+    """
+    C2 = rhs.shape[2] * rhs.shape[3]
+    out = jnp.einsum("klj,kjc->klc", plan.d,
+                     rhs.reshape(rhs.shape[0], rhs.shape[1], C2),
+                     preferred_element_type=plan.d.dtype)
+    return out.reshape(out.shape[0], out.shape[1], rhs.shape[2], rhs.shape[3])
+
+
+def idwt_apply(plan: SoftPlan, lhs):
+    """The clustered iDWT contraction: (K,L,J) x (K,L,C,2) -> (K,J,C,2)."""
+    C2 = lhs.shape[2] * lhs.shape[3]
+    out = jnp.einsum("klj,klc->kjc", plan.d,
+                     lhs.reshape(lhs.shape[0], lhs.shape[1], C2),
+                     preferred_element_type=plan.d.dtype)
+    return out.reshape(out.shape[0], out.shape[1], lhs.shape[2], lhs.shape[3])
+
+
+def _scatter_coeffs(plan: SoftPlan, out):
+    """Scatter out[k, l, c] (complex) into the dense coefficient layout."""
+    B = plan.B
+    # output sign: (-1)^l for reflected members; scale (2l+1)/(8 pi B)
+    sgn = jnp.where(plan.reflected[:, None, :], plan.parity[None, :, None],
+                    jnp.ones((), plan.parity.dtype))
+    out = out * (sgn * plan.scale[None, :, None])
+    buf = jnp.zeros((B, 2 * B, 2 * B), dtype=out.dtype)
+    buf = buf.at[:, plan.scatter_m.reshape(-1), plan.scatter_mp.reshape(-1)].set(
+        out.transpose(1, 0, 2).reshape(B, -1), mode="drop")
+    return buf[:, : 2 * B - 1, : 2 * B - 1]
+
+
+def _gather_coeffs(plan: SoftPlan, fhat):
+    """Gather lhs[k, l, c] = sign * (-1)^{l if reflected} * fhat(member)."""
+    B = plan.B
+    fpad = jnp.pad(fhat, ((0, 0), (0, 1), (0, 1)))   # trash cell reads 0
+    lhs = fpad[:, plan.scatter_m, plan.scatter_mp]   # (L, K, C)
+    lhs = jnp.moveaxis(lhs, 0, 1)                     # (K, L, C)
+    sgn = jnp.where(plan.reflected[:, None, :], plan.parity[None, :, None],
+                    jnp.ones((), plan.parity.dtype))
+    lhs = lhs * (sgn * plan.sign[:, None, :])
+    return jnp.stack([lhs.real, lhs.imag], axis=-1)  # (K, L, C, 2)
+
+
+def _scatter_bins(plan: SoftPlan, g):
+    """Scatter g[k, j, c] (complex) into FFT bins (2B, j, 2B)."""
+    B = plan.B
+    g = jnp.where(plan.reflected[:, None, :], g[:, ::-1, :], g)
+    buf = jnp.zeros((2 * B + 1, 2 * B, 2 * B + 1), dtype=g.dtype)
+    # member bins; unused slots -> trash bin 2B (sliced off)
+    gm = jnp.where(plan.sign != 0, plan.gather_m, 2 * B).reshape(-1)
+    gmp = jnp.where(plan.sign != 0, plan.gather_mp, 2 * B).reshape(-1)
+    buf = buf.at[gm, :, gmp].set(
+        jnp.swapaxes(g, 1, 2).reshape(-1, g.shape[1]), mode="drop")
+    return buf[: 2 * B, :, : 2 * B]
+
+
+# ---------------------------------------------------------------------------
+# full transforms
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=())
+def _forward_jit(plan: SoftPlan, f):
+    S = fft_analysis(f)
+    rhs = _gather_rhs(plan, S)
+    out = dwt_apply(plan, rhs)
+    outc = out[..., 0] + 1j * out[..., 1]
+    return _scatter_coeffs(plan, outc)
+
+
+def forward_clustered(plan: SoftPlan, f, dwt_fn=None):
+    """FSOFT via the clustered DWT.  `dwt_fn` lets callers swap in the
+    Pallas kernel (same (plan, rhs) -> out contract)."""
+    if dwt_fn is None:
+        return _forward_jit(plan, f)
+    S = fft_analysis(f)
+    rhs = _gather_rhs(plan, S)
+    out = dwt_fn(plan, rhs)
+    outc = out[..., 0] + 1j * out[..., 1]
+    return _scatter_coeffs(plan, outc)
+
+
+@partial(jax.jit, static_argnums=())
+def _inverse_jit(plan: SoftPlan, fhat):
+    lhs = _gather_coeffs(plan, fhat)
+    g = idwt_apply(plan, lhs)
+    gc = g[..., 0] + 1j * g[..., 1]
+    gbin = _scatter_bins(plan, gc)
+    return fft_synthesis(gbin)
+
+
+def inverse_clustered(plan: SoftPlan, fhat, idwt_fn=None):
+    """iFSOFT via the clustered iDWT."""
+    if idwt_fn is None:
+        return _inverse_jit(plan, fhat)
+    lhs = _gather_coeffs(plan, fhat)
+    g = idwt_fn(plan, lhs)
+    gc = g[..., 0] + 1j * g[..., 1]
+    gbin = _scatter_bins(plan, gc)
+    return fft_synthesis(gbin)

@@ -1,0 +1,186 @@
+"""Distributed FSOFT / iFSOFT via shard_map (paper Sec. 3, TPU-native).
+
+Pipeline (forward; inverse is the exact mirror):
+
+  stage 1  beta-sharded:   each device FFTs its own beta-slices of the
+           sample grid (j is untouched by the (alpha, gamma) FFT) and
+           gathers the symmetry-cluster RHS columns for ALL clusters on
+           its local j-range (paper: S(m, m'; j)).
+  reshard  ONE all-to-all swaps (cluster, j) ownership: afterwards each
+           device owns the full j-range of ITS kappa-shard of clusters.
+           This is the only communication in the transform.
+  stage 2  cluster-sharded: beta-reflections become local j-reversals,
+           then the clustered DWT contraction runs entirely device-local
+           (the paper's 'exclusive memory range' property).
+
+Coefficients live in the *packed* layout out[k, l, c] (cluster-sharded,
+member slot c), which the inverse consumes directly -- a distributed
+roundtrip therefore needs exactly two all-to-alls and no host gather.
+`packed_to_dense` / `dense_to_packed` convert at the edges when needed.
+
+The Wigner table d[k, l, j] is sharded over clusters, so the B = 512 table
+(~0.4 TB in f64) that forced the paper onto a 128 GB RAM node drops to
+~1.6 GB per device on a 16x16 pod.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .batched import SoftPlan, fft_analysis, fft_synthesis
+
+__all__ = [
+    "check_mesh_compat", "distributed_forward", "distributed_inverse",
+    "packed_to_dense", "dense_to_packed",
+]
+
+
+def check_mesh_compat(plan: SoftPlan, n_shards: int) -> None:
+    if plan.n_padded % n_shards:
+        raise ValueError(
+            f"cluster axis {plan.n_padded} not divisible by {n_shards} shards"
+            " -- build the plan with pad_to=n_shards")
+    if (2 * plan.B) % n_shards:
+        raise ValueError(
+            f"beta axis {2 * plan.B} not divisible by {n_shards} shards")
+
+
+def _refl_sign(plan_reflected, parity):
+    """(-1)^l output factor on beta-reflected member columns."""
+    return jnp.where(plan_reflected[:, None, :], parity[None, :, None],
+                     jnp.ones((), parity.dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _plain_local_dwt(d, rhs2):
+    """(Kloc, L, J) x (Kloc, J, C2) -> (Kloc, L, C2)."""
+    return jnp.einsum("klj,kjc->klc", d, rhs2,
+                      preferred_element_type=d.dtype)
+
+
+def make_bucketed_local_dwt(slices, B):
+    """Local DWT with static l-truncation per extent bucket (paper-P3
+    ragged tiling; see core.batched.bucket_boundaries_from_lstart).
+    `slices`: [(k0, k1, l0)] local-index bucket boundaries."""
+
+    def fn(d, rhs2):
+        outs = []
+        for (k0, k1, l0) in slices:
+            o = jnp.einsum("klj,kjc->klc", d[k0:k1, l0:, :], rhs2[k0:k1],
+                           preferred_element_type=d.dtype)
+            outs.append(jnp.pad(o, ((0, 0), (l0, 0), (0, 0))))
+        return jnp.concatenate(outs, axis=0)
+
+    return fn
+
+
+def distributed_forward(plan: SoftPlan, f, mesh, axis=("data", "model"),
+                        local_dwt=None):
+    """FSOFT on a mesh: f (2B, 2B, 2B) beta-sharded -> packed coefficients
+    (K, B, 8) cluster-sharded.  `axis` may be one mesh axis name or a tuple
+    (the shard axes are flattened).  `local_dwt` swaps the device-local
+    contraction (e.g. make_bucketed_local_dwt)."""
+    axis = (axis,) if isinstance(axis, str) else tuple(axis)
+    n = int(np.prod([mesh.shape[a] for a in axis]))
+    check_mesh_compat(plan, n)
+    local_dwt = local_dwt or _plain_local_dwt
+
+    def body(d, refl, sign, gm, gmp, w, scale, parity, f_loc):
+        S = fft_analysis(f_loc)                       # (2B, jloc, 2B)
+        Sm = S[gm, :, gmp]                            # (K, C, jloc)
+        rhs = Sm * (sign[..., None] * w[None, None, :])
+        rhs = jnp.stack([rhs.real, rhs.imag], -1)     # (K, C, jloc, 2)
+        rhs = jnp.swapaxes(rhs, 1, 2)                 # (K, jloc, C, 2)
+        K, jloc, C, _ = rhs.shape
+        rhs = jax.lax.all_to_all(rhs.reshape(K, jloc, 2 * C), axis,
+                                 split_axis=0, concat_axis=1, tiled=True)
+        rhs = rhs.reshape(K // n, jloc * n, C, 2)     # (Kloc, J, C, 2)
+        rhs = jnp.where(refl[:, None, :, None], rhs[:, ::-1], rhs)
+        out = local_dwt(d, rhs.reshape(*rhs.shape[:2], 2 * C))
+        out = out.reshape(*out.shape[:2], C, 2)
+        outc = out[..., 0] + 1j * out[..., 1]
+        return outc * (_refl_sign(refl, parity) * scale[None, :, None])
+
+    ax0 = P(axis if len(axis) > 1 else axis[0])
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(ax0, ax0, P(), P(), P(), ax0, P(), P(),
+                  P(None, ax0[0], None)),
+        out_specs=ax0,
+    )
+    return sharded(plan.d, plan.reflected, plan.sign, plan.gather_m,
+                   plan.gather_mp, plan.w, plan.scale, plan.parity, f)
+
+
+# ---------------------------------------------------------------------------
+# inverse
+# ---------------------------------------------------------------------------
+
+def distributed_inverse(plan: SoftPlan, packed, mesh, axis=("data", "model")):
+    """iFSOFT on a mesh: packed coefficients (K, B, 8) cluster-sharded ->
+    samples (2B, 2B, 2B) beta-sharded."""
+    axis = (axis,) if isinstance(axis, str) else tuple(axis)
+    n = int(np.prod([mesh.shape[a] for a in axis]))
+    check_mesh_compat(plan, n)
+    B = plan.B
+
+    def body(d, refl, sign_sh, sign, gm, gmp, parity, packed_loc):
+        # sign_sh: cluster-sharded (scales the local lhs);
+        # sign:    replicated (masks the global bin scatter after all-to-all)
+        lhs = packed_loc * (_refl_sign(refl, parity) * sign_sh[:, None, :])
+        lhs = jnp.stack([lhs.real, lhs.imag], -1)     # (Kloc, L, C, 2)
+        C = lhs.shape[2]
+        g = jnp.einsum("klj,klc->kjc", d,
+                       lhs.reshape(*lhs.shape[:2], 2 * C),
+                       preferred_element_type=d.dtype)
+        g = g.reshape(g.shape[0], g.shape[1], C, 2)   # (Kloc, J, C, 2)
+        g = jnp.where(refl[:, None, :, None], g[:, ::-1], g)
+        g = jax.lax.all_to_all(g.reshape(*g.shape[:2], 2 * C), axis,
+                               split_axis=1, concat_axis=0, tiled=True)
+        g = g.reshape(g.shape[0], g.shape[1], C, 2)   # (K, jloc, C, 2)
+        gc = g[..., 0] + 1j * g[..., 1]
+        # scatter member columns into FFT bins (unused slots -> trash bin 2B)
+        gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
+        gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
+        jloc = gc.shape[1]
+        buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gc.dtype)
+        vals = jnp.swapaxes(gc, 1, 2).reshape(-1, jloc)  # (K*C, jloc)
+        buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
+        return fft_synthesis(buf[: 2 * B, :, : 2 * B])
+
+    ax0 = P(axis if len(axis) > 1 else axis[0])
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(ax0, ax0, ax0, P(), P(), P(), P(), ax0),
+        out_specs=P(None, ax0[0], None),
+    )
+    return sharded(plan.d, plan.reflected, plan.sign, plan.sign,
+                   plan.gather_m, plan.gather_mp, plan.parity, packed)
+
+
+# ---------------------------------------------------------------------------
+# packed <-> dense coefficient layout
+# ---------------------------------------------------------------------------
+
+def packed_to_dense(plan: SoftPlan, packed):
+    """packed[k, l, c] -> dense fhat[l, m + B - 1, m' + B - 1]."""
+    B = plan.B
+    buf = jnp.zeros((B, 2 * B, 2 * B), dtype=packed.dtype)
+    buf = buf.at[:, plan.scatter_m.reshape(-1), plan.scatter_mp.reshape(-1)].set(
+        jnp.asarray(packed).transpose(1, 0, 2).reshape(B, -1), mode="drop")
+    return buf[:, : 2 * B - 1, : 2 * B - 1]
+
+
+def dense_to_packed(plan: SoftPlan, fhat):
+    """dense fhat -> packed[k, l, c] (raw member coefficients, no signs)."""
+    fpad = jnp.pad(jnp.asarray(fhat), ((0, 0), (0, 1), (0, 1)))
+    lhs = fpad[:, plan.scatter_m, plan.scatter_mp]    # (L, K, C)
+    return jnp.moveaxis(lhs, 0, 1)                    # (K, L, C)

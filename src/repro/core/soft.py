@@ -1,0 +1,131 @@
+"""Sequential reference FSOFT / iFSOFT (Kostelec & Rockmore; paper Sec. 2).
+
+These are the correctness oracles for everything else in the framework:
+
+  * :func:`direct_inverse` / :func:`direct_forward` -- the O(B^6) literal
+    triple sums (Eqs. 4/5), tiny B only.
+  * :func:`inverse_soft` / :func:`forward_soft` -- the O(B^4)
+    separation-of-variables algorithm with a dense Wigner table:
+    2-D FFT over (alpha, gamma) + per-(m, m') DWT (Sec. 2.4).
+
+Coefficient layout ("dense"): complex array fhat[l, m + B - 1, m' + B - 1]
+of shape (B, 2B-1, 2B-1); entries with l < max(|m|, |m'|) are zero.
+Sample layout: complex array f[i, j, k] on the (alpha_i, beta_j, gamma_k)
+grid of shape (2B, 2B, 2B).
+
+jnp is used throughout so the same code runs under jit; tests run in f64.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import quadrature, wigner
+
+__all__ = [
+    "coeff_count", "random_coeffs", "coeff_mask",
+    "direct_inverse", "direct_forward",
+    "inverse_soft", "forward_soft",
+]
+
+
+def coeff_count(B: int) -> int:
+    """Number of potentially nonzero coefficients: B (4B^2 - 1) / 3."""
+    return B * (4 * B * B - 1) // 3
+
+
+def coeff_mask(B: int) -> np.ndarray:
+    """Boolean mask of valid (l, m, m') cells in the dense layout."""
+    l = np.arange(B)[:, None, None]
+    m = np.abs(np.arange(-(B - 1), B))[None, :, None]
+    mp = np.abs(np.arange(-(B - 1), B))[None, None, :]
+    return (m <= l) & (mp <= l)
+
+
+def random_coeffs(B: int, seed: int = 0, dtype=np.complex128) -> np.ndarray:
+    """Random coefficients as in the paper's benchmark: Re, Im ~ U[-1, 1]."""
+    rng = np.random.default_rng(seed)
+    f = (rng.uniform(-1, 1, (B, 2 * B - 1, 2 * B - 1))
+         + 1j * rng.uniform(-1, 1, (B, 2 * B - 1, 2 * B - 1)))
+    return (f * coeff_mask(B)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# O(B^6) direct transforms (tiny-B oracle)
+# ---------------------------------------------------------------------------
+
+def _wigner_D(B: int):
+    """D(l,m,m'; a_i, b_j, g_k) = e^{-im a} d(l,m,m'; b) e^{-im' g}."""
+    a = quadrature.alphas(B)
+    b = quadrature.betas(B)
+    d = wigner.wigner_d_table(B, b)  # (B, 2B-1, 2B-1, 2B)
+    mm = np.arange(-(B - 1), B)
+    ea = np.exp(-1j * np.outer(mm, a))  # (2B-1, 2B)
+    return d, ea
+
+
+def direct_inverse(fhat: np.ndarray) -> np.ndarray:
+    """f(a_i, b_j, g_k) = sum_{l,m,m'} fhat D(l,m,m')  -- O(B^6)."""
+    B = fhat.shape[0]
+    d, ea = _wigner_D(B)
+    # g[m, j, m'] = sum_l fhat[l,m,m'] d[l,m,m',j]
+    g = np.einsum("lmp,lmpj->mjp", np.asarray(fhat), d)
+    return np.einsum("mi,mjp,pk->ijk", ea, g, ea)
+
+
+def direct_forward(f: np.ndarray, B: int) -> np.ndarray:
+    """fhat(l,m,m') = (2l+1)/(8piB) sum_{ijk} w(j) f conj(D)  -- O(B^6)."""
+    d, ea = _wigner_D(B)
+    w = quadrature.weights(B)
+    # S[m, j, m'] = sum_{i,k} f[i,j,k] e^{+im a_i} e^{+im' g_k}
+    S = np.einsum("mi,ijk,pk->mjp", np.conj(ea), np.asarray(f), np.conj(ea))
+    scale = (2 * np.arange(B) + 1) / (8 * np.pi * B)
+    out = np.einsum("lmpj,j,mjp->lmp", d, w, S)
+    return scale[:, None, None] * out * coeff_mask(B)
+
+
+# ---------------------------------------------------------------------------
+# O(B^4) separated transforms (dense Wigner table)
+# ---------------------------------------------------------------------------
+
+def _bin_index(B: int) -> np.ndarray:
+    """FFT bin of each order m = -(B-1)..(B-1): m mod 2B."""
+    return np.arange(-(B - 1), B) % (2 * B)
+
+
+def inverse_soft(fhat, d_table=None):
+    """iFSOFT: coefficients (B, 2B-1, 2B-1) -> samples (2B, 2B, 2B).
+
+    iDWT (g = sum_l fhat d) followed by an unnormalized forward 2-D FFT
+    over the m -> i and m' -> k axes.
+    """
+    B = fhat.shape[0]
+    if d_table is None:
+        d_table = wigner.wigner_d_table(B)
+    d = jnp.asarray(d_table)
+    fhat = jnp.asarray(fhat)
+    g = jnp.einsum("lmp,lmpj->mjp", fhat, d.astype(fhat.real.dtype))
+    bins = _bin_index(B)
+    gbin = jnp.zeros((2 * B, 2 * B, 2 * B), dtype=fhat.dtype)
+    gbin = gbin.at[jnp.ix_(bins, jnp.arange(2 * B), bins)].set(g)
+    return jnp.fft.fft(jnp.fft.fft(gbin, axis=0), axis=2)
+
+
+def forward_soft(f, B: int, d_table=None):
+    """FSOFT: samples (2B, 2B, 2B) -> coefficients (B, 2B-1, 2B-1).
+
+    Unnormalized inverse 2-D FFT (positive exponent) to get S(m, m'; j),
+    then the weighted DWT per (m, m') (paper Eq. 5).
+    """
+    if d_table is None:
+        d_table = wigner.wigner_d_table(B)
+    d = jnp.asarray(d_table)
+    f = jnp.asarray(f)
+    S = (2 * B) ** 2 * jnp.fft.ifft(jnp.fft.ifft(f, axis=0), axis=2)
+    bins = _bin_index(B)
+    Ssel = S[jnp.ix_(bins, jnp.arange(2 * B), bins)]  # (2B-1, 2B, 2B-1)
+    w = jnp.asarray(quadrature.weights(B))
+    scale = jnp.asarray((2 * np.arange(B) + 1) / (8 * np.pi * B))
+    out = jnp.einsum("lmpj,j,mjp->lmp", d.astype(f.real.dtype),
+                     w.astype(f.real.dtype), Ssel)
+    return scale[:, None, None] * out * jnp.asarray(coeff_mask(B))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  dwt.py               clustered DWT/iDWT (dense + ragged-fold schedules)
+  wigner_rec.py        DWT fused with the on-the-fly Wigner-d recurrence
+  folded_attention.py  causal flash attention on the paper's folded grid
+  ops.py               jit'd wrappers (auto interpret-mode on CPU)
+  ref.py               pure-jnp oracles
+"""
+from . import dwt, folded_attention, ops, ref, wigner_rec  # noqa: F401

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: causal flash attention with the paper's triangle fold.
+
+Causal attention has the same triangular work domain as the paper's DWT
+index set {(m, m') : m' <= m}: q-block t needs kv-blocks 0..t.  A naive
+causal grid (Qb x Qb slots) wastes the upper half; dynamic scheduling (the
+OpenMP answer) does not exist on a TPU core.  We apply the paper's Fig.-1
+geometric fold (DESIGN.md P3) to the grid instead:
+
+    grid slot (t, kappa), kappa in [0, Qb]:
+        kappa <= t : q-block = t          , kv-block = kappa
+        kappa >  t : q-block = Qb - 1 - t , kv-block = kappa - t - 1
+
+Row t of the folded grid processes q-blocks t (t+1 slots) and Qb-1-t
+(Qb-t slots): Qb+1 slots total, *constant in t* -- the heavy/light pairing
+of the paper's fold.  The grid shrinks from Qb^2 to (Qb/2)(Qb+1) slots with
+zero masked-out work: a ~2x schedule win with integer-only index
+reconstruction inside the BlockSpec index_maps (exactly the property the
+paper engineered the fold for).
+
+The diagonal (masked) block is always a segment's LAST slot, so segment
+boundaries are: start at kappa in {0, t+1}, end at kappa in {t, Qb}.
+Online-softmax state (m, l, acc) lives in VMEM scratch and is re-seeded at
+each segment start.  Supports GQA (Hq % Hkv == 0) and a `naive` schedule
+for the before/after comparison in benchmarks/kernel_schedule.py.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["folded_causal_attention", "grid_slots"]
+
+NEG_INF = float("-inf")
+
+
+def grid_slots(seq: int, bq: int, schedule: str) -> int:
+    """Grid slots executed per (batch, head) -- the schedule-balance metric."""
+    qb = seq // bq
+    return qb * qb if schedule == "naive" else (qb // 2) * (qb + 1)
+
+
+def _attn_step(q, k, v, m_scr, l_scr, acc_scr, *, scale, is_start, is_diag,
+               bq, bk):
+    """One online-softmax block update (all f32)."""
+
+    @pl.when(is_start)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(jnp.logical_or(jnp.logical_not(is_diag), rows >= cols),
+                  s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _folded_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, qb_count, bq, bk):
+    t = pl.program_id(1)
+    kappa = pl.program_id(2)
+    first_seg = kappa <= t
+    is_start = jnp.logical_or(kappa == 0, kappa == t + 1)
+    is_end = jnp.logical_or(kappa == t, kappa == qb_count)  # == diag block
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0]
+    _attn_step(q, k, v, m_scr, l_scr, acc_scr, scale=scale,
+               is_start=is_start, is_diag=is_end, bq=bq, bk=bk)
+
+    @pl.when(is_end)
+    def _():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def _naive_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale, qb_count, bq, bk):
+    qb = pl.program_id(1)
+    kv = pl.program_id(2)
+
+    @pl.when(kv <= qb)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0]
+        _attn_step(q, k, v, m_scr, l_scr, acc_scr, scale=scale,
+                   is_start=kv == 0, is_diag=kv == qb, bq=bq, bk=bk)
+
+        @pl.when(kv == qb)
+        def _():
+            o_ref[0, 0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+@partial(jax.jit,
+         static_argnames=("bq", "bk", "scale", "schedule", "interpret"))
+def folded_causal_attention(q, k, v, *, bq=128, bk=128, scale=None,
+                            schedule="folded", interpret=True):
+    """Causal flash attention.  q: (B, Hq, S, D); k, v: (B, Hkv, S, D).
+
+    schedule: "folded" (paper-P3 grid) or "naive" (masked square grid).
+    Both produce identical values; they differ only in executed grid slots.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} % Hkv={Hkv}")
+    group = Hq // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    if bq != bk:
+        raise ValueError("fold requires bq == bk")
+    if S % bq:
+        raise ValueError(f"S={S} % bq={bq}")
+    qb_count = S // bq
+    if scale is None:
+        scale = float(1.0 / D**0.5)
+
+    def b_of(bh):
+        return bh // Hq
+
+    def h_of(bh):
+        return bh % Hq
+
+    if schedule == "folded":
+        if qb_count % 2:
+            raise ValueError(f"folded schedule needs an even number of "
+                             f"q-blocks, got {qb_count} (use naive or pad)")
+        grid = (B * Hq, qb_count // 2, qb_count + 1)
+
+        def qmap(bh, t, kp):
+            qb = jnp.where(kp <= t, t, qb_count - 1 - t)
+            return (b_of(bh), h_of(bh), qb, 0)
+
+        def kvmap(bh, t, kp):
+            kvb = jnp.where(kp <= t, kp, kp - t - 1)
+            return (b_of(bh), h_of(bh) // group, kvb, 0)
+
+        kernel = _folded_kernel
+    elif schedule == "naive":
+        grid = (B * Hq, qb_count, qb_count)
+
+        def qmap(bh, t, kp):
+            return (b_of(bh), h_of(bh), t, 0)
+
+        def kvmap(bh, t, kp):
+            return (b_of(bh), h_of(bh) // group, kp, 0)
+
+        kernel = _naive_kernel
+    else:
+        raise ValueError(schedule)
+
+    return pl.pallas_call(
+        functools.partial(kernel, scale=scale, qb_count=qb_count,
+                          bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), qmap),
+            pl.BlockSpec((1, 1, bk, D), kvmap),
+            pl.BlockSpec((1, 1, bk, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), qmap),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

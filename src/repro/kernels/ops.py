@@ -1,0 +1,147 @@
+"""Jit'd wrappers binding the Pallas kernels to the framework.
+
+  * :func:`make_dwt_fn` / :func:`make_idwt_fn` -- drop-in replacements for
+    core.batched.dwt_apply / idwt_apply (plug into forward_clustered /
+    inverse_clustered via the dwt_fn argument).  Implementations:
+      "dense"    -- kernels/dwt.py dense grid
+      "ragged"   -- kernels/dwt.py work-list grid (paper P3 schedule)
+      "onthefly" -- kernels/wigner_rec.py fused recurrence (no d-table HBM)
+  * :func:`attention` -- folded causal flash attention with automatic
+    interpret-mode selection (CPU validates, TPU compiles).
+
+All wrappers run the kernels in interpret mode on CPU so the whole test
+suite exercises the real kernel bodies.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quadrature, wigner
+from repro.core.batched import SoftPlan
+
+from . import dwt as dwt_kernels
+from . import folded_attention as fa
+from . import wigner_rec
+
+__all__ = ["default_interpret", "make_dwt_fn", "make_idwt_fn",
+           "onthefly_inputs", "attention"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def _split_ri(x):
+    """(K, A, C, 2) -> (K, A, C*2) merging the real/imag axis into lanes."""
+    return x.reshape(*x.shape[:2], -1)
+
+
+def _unsplit_ri(x, c):
+    return x.reshape(*x.shape[:2], c, 2)
+
+
+def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):
+    """Host-side: sort clusters by l-start so tiles bucket uniform work
+    (integer-only bookkeeping, DESIGN.md P3), then enumerate blocks."""
+    l_start = np.zeros(plan.n_padded, np.int32)
+    l_start[: plan.n_clusters] = plan.table.rep[:, 0]
+    # padded clusters have zero Wigner blocks; give them full "extent" so
+    # they sort to the front together -- they cost nothing extra since the
+    # kernel output is masked anyway. Sort ascending l_start.
+    perm = np.argsort(l_start, kind="stable").astype(np.int32)
+    kk, ll, n_dense = dwt_kernels.build_work_list(l_start[perm], tk, tl,
+                                                  plan.d.shape[1])
+    return perm, l_start, kk, ll, n_dense
+
+
+def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
+                interpret=None):
+    """Build a dwt_fn(plan, rhs) for core.batched.forward_clustered."""
+    interpret = default_interpret() if interpret is None else interpret
+    if impl == "dense":
+        def fn(p: SoftPlan, rhs):
+            out = dwt_kernels.dwt_dense(p.d, _split_ri(rhs), tk=tk, tl=tl,
+                                        tj=tj, interpret=interpret)
+            return _unsplit_ri(out, rhs.shape[2])
+        return fn
+
+    if impl == "ragged":
+        perm, l_start, kk, ll, _ = _ragged_metadata(plan, tk, tl)
+        inv_perm = np.argsort(perm)
+        l_grid = np.arange(plan.d.shape[1])
+        mask = jnp.asarray((l_grid[None, :] >= l_start[:, None]))  # (K, L)
+
+        def fn(p: SoftPlan, rhs):
+            out = dwt_kernels.dwt_ragged(p.d[perm], _split_ri(rhs)[perm],
+                                         kk, ll, tk=tk, tl=tl, tj=tj,
+                                         interpret=interpret)
+            out = out[inv_perm]
+            out = jnp.where(mask[:, :, None], out, 0.0)
+            return _unsplit_ri(out, rhs.shape[2])
+        return fn
+
+    if impl == "onthefly":
+        seeds, m, mp, cb = onthefly_inputs(plan)
+
+        def fn(p: SoftPlan, rhs):
+            out = wigner_rec.dwt_onthefly(seeds, m, mp, cb, _split_ri(rhs),
+                                          B=p.B, tk=tk, interpret=interpret)
+            return _unsplit_ri(out, rhs.shape[2])
+        return fn
+
+    raise ValueError(impl)
+
+
+def make_idwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
+                 interpret=None):
+    """Build an idwt_fn(plan, lhs) for core.batched.inverse_clustered."""
+    interpret = default_interpret() if interpret is None else interpret
+    if impl == "dense":
+        def fn(p: SoftPlan, lhs):
+            out = dwt_kernels.idwt_dense(p.d, _split_ri(lhs), tk=tk, tl=tl,
+                                         tj=tj, interpret=interpret)
+            return _unsplit_ri(out, lhs.shape[2])
+        return fn
+
+    if impl == "onthefly":
+        seeds, m, mp, cb = onthefly_inputs(plan)
+
+        def fn(p: SoftPlan, lhs):
+            out = wigner_rec.idwt_onthefly(seeds, m, mp, cb, _split_ri(lhs),
+                                           B=p.B, tk=tk, interpret=interpret)
+            return _unsplit_ri(out, lhs.shape[2])
+        return fn
+
+    raise ValueError(impl)
+
+
+def onthefly_inputs(plan: SoftPlan):
+    """Seeds/orders/cos(beta) for the fused-recurrence kernels.
+
+    Padded clusters get zero seeds -> identically zero Wigner rows."""
+    B = plan.B
+    beta = quadrature.betas(B)
+    K = plan.n_padded
+    seeds = np.zeros((K, 2 * B))
+    m = np.zeros(K, np.int32)
+    mp = np.zeros(K, np.int32)
+    for kidx in range(plan.n_clusters):
+        mm, mmp = plan.table.rep[kidx]
+        seeds[kidx] = wigner.wigner_seed(int(mm), int(mmp), beta)
+        m[kidx], mp[kidx] = mm, mmp
+    dt = plan.d.dtype
+    return (jnp.asarray(seeds, dt), jnp.asarray(m), jnp.asarray(mp),
+            jnp.asarray(np.cos(beta), dt))
+
+
+def attention(q, k, v, *, bq=128, bk=128, scale=None, schedule="folded",
+              interpret=None):
+    """Folded causal flash attention (see kernels/folded_attention.py)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return fa.folded_causal_attention(q, k, v, bq=bq, bk=bk, scale=scale,
+                                      schedule=schedule, interpret=interpret)

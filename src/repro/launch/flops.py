@@ -1,0 +1,151 @@
+"""Analytic FLOP counting on the jaxpr (loop-aware).
+
+XLA's HloCostAnalysis counts a `while` body ONCE, so scan-over-layers
+programs under-report FLOPs by the trip count (verified empirically: a
+30-layer scanned model reports ~1/7 of 6*N*D).  This counter walks the
+jaxpr instead, where loop structure is explicit:
+
+  * dot_general: 2 * batch * M * N * K  (the MXU work; elementwise ops are
+    ignored -- they are bandwidth, not FLOP, dominated),
+  * fft: 5 n log2 n per transform axis (complex),
+  * scan: body x length  (lax.map lowers to scan, so attention q-chunking
+    and chunked CE are covered),
+  * any eqn carrying sub-jaxprs (pjit, remat/checkpoint, shard_map,
+    custom_vjp, cond branches): recursed -- remat recompute therefore
+    counts, matching what actually executes,
+  * shard_map bodies see LOCAL shapes; their counts are multiplied by the
+    mesh size so the returned number is always GLOBAL executed FLOPs.
+
+Validated against cost_analysis on loop-free programs (tests/test_launch).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.extend.core as jcore
+
+
+def _aval_size(aval):
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _dot_flops(eqn) -> int:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = int(np.prod([a.shape[i] for i in lb])) if lb else 1
+    k = int(np.prod([a.shape[i] for i in lc])) if lc else 1
+    m = _aval_size(a) // max(batch * k, 1)
+    n = _aval_size(b) // max(batch * k, 1)
+    return 2 * batch * m * n * k
+
+
+def _fft_flops(eqn) -> int:
+    a = eqn.invars[0].aval
+    lens = eqn.params.get("fft_lengths", ())
+    total = _aval_size(a)
+    fl = 0
+    for n in lens:
+        if n > 1:
+            fl += int(5 * total * math.log2(n))
+    return fl
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # output elements * (2 * kernel_size * in_channels)
+    kernel = _aval_size(rhs)
+    out_spatial = _aval_size(out)
+    return 2 * out_spatial * kernel // max(rhs.shape[-1], 1)
+
+
+def _sub_jaxprs(params):
+    for v in params.values():
+        if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+                    yield x
+
+
+def _walk(jaxpr, mesh_size) -> int:
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn)
+        elif name == "fft":
+            total += _fft_flops(eqn)
+        elif name == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif name == "scan":
+            body = eqn.params["jaxpr"]
+            total += eqn.params["length"] * _walk(body, mesh_size)
+        elif name == "while":
+            # not emitted by our model code (scan/map only); count once
+            for sub in _sub_jaxprs(eqn.params):
+                total += _walk(sub, mesh_size)
+        elif name == "shard_map":
+            for sub in _sub_jaxprs(eqn.params):
+                total += mesh_size * _walk(sub, mesh_size)
+        else:
+            for sub in _sub_jaxprs(eqn.params):
+                total += _walk(sub, mesh_size)
+    return total
+
+
+def analytic_flops(fn, *args, mesh_size: int = 1) -> int:
+    """GLOBAL executed FLOPs of fn(*args) (dots/ffts/convs, loop-aware)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return _walk(jaxpr, mesh_size)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic
+# ---------------------------------------------------------------------------
+
+def _aval_bytes(aval):
+    return _aval_size(aval) * getattr(aval.dtype, "itemsize", 4)
+
+
+def _walk_bytes(jaxpr, mesh_size) -> int:
+    """Dot/fft/conv operand+result bytes, loop-aware (see analytic_bytes)."""
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in ("dot_general", "fft", "conv_general_dilated"):
+            total += sum(_aval_bytes(v.aval) for v in eqn.invars
+                         if hasattr(v, "aval"))
+            total += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        elif name == "scan":
+            total += eqn.params["length"] * _walk_bytes(eqn.params["jaxpr"],
+                                                        mesh_size)
+        elif name == "shard_map":
+            for sub in _sub_jaxprs(eqn.params):
+                total += mesh_size * _walk_bytes(sub, mesh_size)
+        else:
+            for sub in _sub_jaxprs(eqn.params):
+                total += _walk_bytes(sub, mesh_size)
+    return total
+
+
+def analytic_bytes(fn, *args, mesh_size: int = 1) -> int:
+    """GLOBAL HBM-traffic estimate: every matmul/fft/conv reads its
+    operands and writes its result once (elementwise chains fuse into the
+    surrounding dots on TPU, so they are free), plus one read of the
+    function inputs and one write of its outputs (params/optimizer-state
+    streaming, embedding tables, batch, KV caches).  Loop trip counts are
+    applied like in analytic_flops.  This replaces XLA:CPU's
+    `bytes accessed` which (a) counts while bodies once and (b) reflects
+    CPU (unfused) memory planning rather than TPU fusion."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    io = sum(_aval_bytes(v.aval) for v in jaxpr.jaxpr.invars)
+    io += sum(_aval_bytes(v.aval) for v in jaxpr.jaxpr.outvars)
+    return _walk_bytes(jaxpr, mesh_size) + io

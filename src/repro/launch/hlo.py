@@ -1,0 +1,138 @@
+"""Post-compile HLO analysis: collective-traffic accounting for §Roofline.
+
+`collective_bytes(hlo_text)` parses the optimized per-device HLO module,
+sums the RESULT bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction, and -- crucially for
+scan-over-layers programs -- multiplies collectives inside `while` bodies
+by the loop trip count (max integer constant in the condition computation,
+the canonical XLA pattern for lax.scan/map counters).  Without the
+multiplier a G-group layer scan under-counts collectives by G x.
+
+Result-bytes convention: for all-reduce result==operand; for all-gather the
+result is the gathered buffer (≈ per-device wire receive); for
+reduce-scatter the result is the scattered shard (≈ per-device wire after
+reduction).  Async pairs (`-start`/`-done`) are counted once at `-start`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=(]*(?:\([^)]*\))?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_DONE_RE = re.compile(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\(")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?"
+                       r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(text: str):
+    """-> {computation_name: body_text}."""
+    comps = {}
+    name = None
+    buf: list = []
+    for line in text.splitlines():
+        if name is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                name = m.group(1)
+                buf = []
+        else:
+            if line.strip() == "}":
+                comps[name] = "\n".join(buf)
+                name = None
+            else:
+                buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def _line_collective_bytes(line: str):
+    """(op, result_bytes) if `line` is a collective instruction."""
+    if _DONE_RE.search(line):
+        return None  # counted at -start
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    result_seg, op = m.group(1), m.group(2)
+    total = sum(_shape_bytes(d, dims)
+                for d, dims in _SHAPE_RE.findall(result_seg))
+    return op, total
+
+
+def _trip_count(cond_text: str) -> int:
+    """Heuristic trip count: max integer constant in the tiny condition
+    computation (the scan/map iteration bound)."""
+    consts = [int(c) for c in re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str):
+    """-> {"by_op": {op: bytes}, "total": int, "count": int} per device."""
+    comps = _split_computations(hlo_text)
+
+    raw = {}
+    children = defaultdict(list)   # comp -> [(callee, trip_multiplier)]
+    for cname, body in comps.items():
+        by_op = defaultdict(int)
+        count = 0
+        for line in body.splitlines():
+            got = _line_collective_bytes(line)
+            if got:
+                by_op[got[0]] += got[1]
+                count += 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, wbody = wm.group(1), wm.group(2)
+                trip = _trip_count(comps.get(cond, ""))
+                children[cname].append((wbody, trip))
+                children[cname].append((cond, trip))
+            else:
+                for cm in _CALLS_RE.finditer(line):
+                    children[cname].append((cm.group(1), 1))
+        raw[cname] = (dict(by_op), count)
+
+    called = {c for lst in children.values() for c, _ in lst}
+    entries = [c for c in comps if c not in called] or list(comps)[-1:]
+
+    total_by_op: dict = defaultdict(int)
+    total_count = 0
+
+    def walk(cname, mult, stack):
+        nonlocal total_count
+        if cname not in raw or cname in stack:
+            return
+        by_op, count = raw[cname]
+        for op, b in by_op.items():
+            total_by_op[op] += b * mult
+        total_count += count * mult
+        for callee, trip in children.get(cname, ()):
+            walk(callee, mult * trip, stack + [cname])
+
+    for e in entries:
+        walk(e, 1, [])
+    return {"by_op": dict(total_by_op), "total": sum(total_by_op.values()),
+            "count": total_count}

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state, so tests and tools can import it freely under a
+single real device.  The dry-run process sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax
+(see dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_ctx(mesh) -> ShardCtx:
+    """ShardCtx with every non-"model" axis treated as data-parallel."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return ShardCtx(mesh=mesh, dp_axes=dp, model_axis="model")
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for subprocess tests (fake devices)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,67 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires config -> mesh -> sharded params -> data pipeline -> fault-tolerant
+Trainer.  On this CPU container it is exercised with reduced configs
+(examples/train_lm.py trains the ~100M smollm); on a real fleet the same
+entry point runs per host under `jax.distributed.initialize` (the data
+pipeline and checkpointer are already shard/process-aware).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+from repro.train.straggler import StragglerPolicy
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    tcfg = TrainConfig(
+        steps=args.steps, microbatch=args.microbatch,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+        opt=OptConfig(name=args.opt, peak_lr=args.lr,
+                      warmup_steps=max(args.steps // 20, 5),
+                      decay_steps=args.steps),
+    )
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, num_shards=jax.process_count(),
+        seed=tcfg.seed), shard=jax.process_index())
+    policy = StragglerPolicy(jax.process_count())
+    trainer = Trainer(cfg, tcfg, data, policy=policy)
+    trainer.run()
+    for h in trainer.history:
+        if "loss" in h and h["step"] % args.log_every == 0:
+            print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+                  f"gnorm {h['grad_norm']:.3f} lr {h['lr']:.2e}")
+    final = [h for h in trainer.history if "loss" in h][-1]
+    print(f"final: step {final['step']} loss {final['loss']:.4f}")
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

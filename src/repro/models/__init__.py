@@ -1,0 +1,2 @@
+"""LM substrate: layers, attention, recurrent mixers, MoE, full models."""
+from . import attention, layers, lm, moe, rglru, rwkv6, sharding  # noqa: F401

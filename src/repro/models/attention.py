@@ -1,0 +1,149 @@
+"""Attention mixers: GQA/MQA/MHA with RoPE/M-RoPE, sliding-window variant,
+chunked (flash-style) jnp implementation for train/prefill, and single-step
+KV-cache decode.
+
+The q-chunked jnp path is the portable implementation every mesh can lower
+(the dry-run uses it); on real TPUs the Pallas folded-schedule kernel
+(repro.kernels.folded_attention) replaces the inner loop 1:1 -- its oracle
+(kernels/ref.attention_ref) equals this module's output, which tests assert.
+
+Sharding notes: heads shard over "model"; the (B, S) axes shard over
+("pod","data")/seq.  The q-chunk lax.map keeps live attention scores to
+(B, H, chunk, S) so 32k-prefill activations stay bounded.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+NEG_INF = -1e30  # finite mask value: -inf breaks softmax rows that are fully
+#                  masked during sliding-window decode warmup
+
+
+def attn_init(key, cfg, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": layers.dense_init(kq, d, cfg.q_dim, dtype),
+        "wk": layers.dense_init(kk, d, cfg.kv_dim, dtype),
+        "wv": layers.dense_init(kv, d, cfg.kv_dim, dtype),
+        "wo": layers.dense_init(ko, cfg.q_dim, d, dtype),
+    }
+
+
+def _project(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, D)
+    if cfg.pos_type == "rope":
+        pos = positions if positions.ndim == 2 else positions[0]
+        q = layers.rope(q, pos, cfg.rope_theta)
+        k = layers.rope(k, pos, cfg.rope_theta)
+    elif cfg.pos_type == "mrope":
+        q = layers.mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = layers.mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_causal(q, k, v, *, chunk, window, softcap_val, scale):
+    """q-chunked masked attention.  q: (B, S, H, D), k/v: (B, S, Hkv, D).
+
+    Scores per chunk: (B, H, chunk, S) f32; lax.map bounds live memory to a
+    single chunk.  window > 0 restricts to a sliding window (local attn).
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    chunk = min(chunk, S)
+    Sp = ((S + chunk - 1) // chunk) * chunk  # pad ragged tail chunk
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    nc = Sp // chunk
+    qg = q.reshape(B, nc, chunk, Hkv, g, D)
+    kv_pos = jnp.arange(S)
+
+    def one_chunk(ci):
+        qc = jax.lax.dynamic_index_in_dim(qg, ci, axis=1, keepdims=False)
+        q_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = layers.softcap(s, softcap_val)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", pattn,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.lax.map(one_chunk, jnp.arange(nc))        # (nc, B, chunk, Hkv, g, D)
+    out = jnp.moveaxis(out, 0, 1)                        # (B, nc, chunk, ...)
+    return out.reshape(B, Sp, H, D)[:, :S]
+
+
+def attn_apply(p, x, cfg, positions, *, window=0):
+    """Training / prefill attention over a full sequence."""
+    q, k, v = _project(p, x, cfg, positions)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _chunked_causal(q, k, v, chunk=cfg.attn_chunk, window=window,
+                          softcap_val=cfg.logit_softcap, scale=scale)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg, batch, max_len, dtype, window=0):
+    """KV cache for one attention layer.  Local attention keeps only the
+    window (ring buffer) -- this is what makes recurrentgemma's long_500k
+    decode O(window) instead of O(S)."""
+    L = min(window, max_len) if window else max_len
+    Hkv, D = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, L, Hkv, D), dtype),
+            "v": jnp.zeros((batch, L, Hkv, D), dtype)}
+
+
+def decode_step(p, x1, cfg, cache, pos, *, window=0):
+    """One-token decode.  x1: (B, 1, d); pos: scalar int32 current position.
+
+    Returns (out (B, 1, d), new_cache).
+    """
+    B = x1.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.pos_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k1, v1 = _project(p, x1, cfg, positions)
+
+    L = cache["k"].shape[1]
+    # local attention uses a ring buffer of size L = window; k/v were
+    # RoPE-rotated with their absolute positions at write time.
+    slot = pos % L if window else jnp.minimum(pos, L - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, axis=1)
+
+    Hkv, D = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // Hkv
+    qh = q.reshape(B, 1, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / np.sqrt(D)
+    s = layers.softcap(s, cfg.logit_softcap)
+    idx = jnp.arange(L)
+    if window:
+        # slot i holds absolute position pos - ((slot - i) mod L); valid
+        # iff that is >= 0 (covers both warmup and steady-state wrap).
+        age = jnp.mod(slot - idx, L)
+        valid = age <= pos
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pattn, cv.astype(jnp.float32))
+    out = out.astype(x1.dtype).reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"], {"k": ck, "v": cv}

@@ -1,0 +1,140 @@
+"""Common LM layers: norms, embeddings, rotary variants, MLPs.
+
+Pure functions over param pytrees (nested dicts).  Every function takes
+explicit dtypes; norms/softmax/rotary always compute in f32 and cast back,
+so the package is safe under either x64 flag setting.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) param.
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.zeros((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"]) + p["bias"]
+    return y.astype(x.dtype)
+
+
+def make_norm(kind):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    # std 0.02 (GPT/llama convention); keeps tied-head logits ~O(1) at init
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim, theta, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding.  x: (B, S, H, D); positions: (B, S) int."""
+    D = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(D, theta))          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x, positions, sections, theta=10000.0):
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S) = (t, h, w) indices;
+    `sections` splits the D/2 frequency channels between t/h/w."""
+    D = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(D, theta))          # (D/2,)
+    # choose which position stream drives each frequency channel
+    sec = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    assert len(sec) == D // 2, (sections, D)
+    pos = positions.astype(jnp.float32)                  # (3, B, S)
+    ang = pos[sec, :, :].transpose(1, 2, 0) * freqs      # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+GATED = {"swiglu": jax.nn.silu, "geglu": lambda x: jax.nn.gelu(x, approximate=True)}
+PLAIN = {"gelu": lambda x: jax.nn.gelu(x, approximate=True),
+         "sqrelu": lambda x: jnp.square(jax.nn.relu(x))}
+
+
+def mlp_init(key, d, ff, kind, dtype):
+    k1, k2 = jax.random.split(key)
+    wi_out = 2 * ff if kind in GATED else ff
+    return {"wi": dense_init(k1, d, wi_out, dtype),
+            "wo": dense_init(k2, ff, d, dtype)}
+
+
+def mlp_apply(p, x, kind):
+    h = x @ p["wi"]
+    if kind in GATED:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = GATED[kind](g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = PLAIN[kind](h.astype(jnp.float32)).astype(x.dtype)
+    return h @ p["wo"]
+
+
+def softcap(logits, cap):
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)

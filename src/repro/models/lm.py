@@ -1,0 +1,476 @@
+"""Full language model: embeddings -> pattern-cycled blocks -> chunked-CE
+loss / serve steps.
+
+Key structural choices (scale-critical, see DESIGN.md Sec. 6):
+
+  * scan-over-layers: layers with the same pattern slot are stacked into
+    (G, ...) params and driven by one jax.lax.scan -- HLO size and SPMD
+    partitioning time stay O(pattern), not O(layers); remat policy wraps
+    the scan body.
+  * chunked cross-entropy: logits (B, S, V) are never materialized; a scan
+    over sequence chunks computes log-softmax NLL per chunk (vocab sharded
+    over "model").
+  * serve paths: `prefill` builds the per-layer state (KV cache / RG-LRU /
+    RWKV state) at full sequence length; `decode_step` advances one token.
+
+Params are nested dicts; `init` is eval_shape-able so the dry-run can build
+ShapeDtypeStruct params without allocating 340B-parameter models.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe, rglru, rwkv6
+from .sharding import constrain
+
+MIXERS = ("attn", "local_attn", "rglru", "rwkv6")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _mixer_init(key, kind, cfg, dtype):
+    if kind in ("attn", "local_attn"):
+        return attention.attn_init(key, cfg, dtype)
+    if kind == "rglru":
+        return rglru.rglru_init(key, cfg, dtype)
+    if kind == "rwkv6":
+        return rwkv6.rwkv6_init(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _block_init(key, kind, cfg, dtype, use_moe=None):
+    norm_init, _ = layers.make_norm(cfg.norm_type)
+    km, kf = jax.random.split(key)
+    p = {
+        "norm1": norm_init(cfg.d_model),
+        "mixer": _mixer_init(km, kind, cfg, dtype),
+        "norm2": norm_init(cfg.d_model),
+    }
+    use_moe = cfg.moe is not None if use_moe is None else use_moe
+    if use_moe:
+        p["moe"] = moe.moe_init(kf, cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                                   dtype)
+    return p
+
+
+def init(cfg, key):
+    """Initialize the full model parameter pytree."""
+    dtype = layers.dtype_of(cfg.param_dtype)
+    pat = cfg.block_pattern
+    G = cfg.num_layers // len(pat)
+    rem = cfg.num_layers % len(pat)
+
+    keys = jax.random.split(key, 3 + G * len(pat) + rem)
+    ki = iter(range(len(keys)))
+    params = {"embed": layers.embed_init(keys[next(ki)], cfg.vocab_size,
+                                         cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = layers.embed_init(keys[next(ki)], cfg.vocab_size,
+                                           cfg.d_model, dtype)
+    norm_init, _ = layers.make_norm(cfg.norm_type)
+    params["final_norm"] = norm_init(cfg.d_model)
+
+    # stacked scan groups: params["groups"][slot] has leading dim G
+    groups = []
+    if G:
+        for slot, kind in enumerate(pat):
+            stack = [_block_init(keys[next(ki)], kind, cfg, dtype,
+                                 cfg.slot_uses_moe(slot))
+                     for _ in range(G)]
+            groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+    params["groups"] = groups
+    # remainder layers (pattern prefix), unstacked
+    params["tail"] = [_block_init(keys[next(ki)], pat[i], cfg, dtype,
+                                  cfg.slot_uses_moe(i))
+                      for i in range(rem)]
+    return params
+
+
+def count_params(cfg) -> int:
+    shapes = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg) -> int:
+    """Active per-token params (MoE: top_k of num_experts routed)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    shapes = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        if "moe" in names and names[-1] in ("wi", "wo"):
+            expert += int(np.prod(leaf.shape))
+    m = cfg.moe
+    return total - expert + int(expert * m.top_k / m.num_experts)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, kind, x, cfg, positions, ctx):
+    _, norm = layers.make_norm(cfg.norm_type)
+    h = norm(p["norm1"], x)
+    if kind == "attn":
+        mix = attention.attn_apply(p["mixer"], h, cfg, positions)
+    elif kind == "local_attn":
+        mix = attention.attn_apply(p["mixer"], h, cfg, positions,
+                                   window=cfg.window)
+    elif kind == "rglru":
+        mix = rglru.rglru_apply(p["mixer"], h, cfg)
+    elif kind == "rwkv6":
+        mix = rwkv6.rwkv6_apply(p["mixer"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    h = norm(p["norm2"], x)
+    if "moe" in p:
+        f, aux = moe.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        f, aux = layers.mlp_apply(p["mlp"], h, cfg.mlp_type), 0.0
+    x = x + f
+    if ctx is not None:
+        x = constrain(x, ctx, ctx.dp, None, None)
+    return x, aux
+
+
+def forward(params, cfg, batch, ctx=None):
+    """Token/embedding inputs -> final hidden states (B, S, d)."""
+    dtype = layers.dtype_of(cfg.compute_dtype)
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(dtype)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    pat = cfg.block_pattern
+    G = cfg.num_layers // len(pat)
+
+    def group_body(x, gparams):
+        aux = jnp.zeros((), jnp.float32)
+        for slot, kind in enumerate(pat):
+            x, a = _block_apply(gparams[slot], kind, x, cfg, positions, ctx)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat == "block":
+        group_body = jax.checkpoint(group_body)
+
+    if G:
+        if cfg.remat == "nested" and cfg.scan_layers:
+            # sqrt-remat: only the OUTER scan saves carries (Go of them);
+            # inner segments of Gi groups are recomputed in the backward.
+            # Activation-carry memory drops G/Go x for ~one extra forward
+            # of the inner segment -- the lever that cuts grad-accumulation
+            # steps (and with them TP collective traffic) on 340B/400B
+            # models; see EXPERIMENTS.md Sec. Perf.
+            gi = cfg.remat_inner or max(int(np.sqrt(G)), 1)
+            while G % gi:
+                gi -= 1
+            go = G // gi
+            inner_groups = jax.tree.map(
+                lambda a: a.reshape(go, gi, *a.shape[1:]), params["groups"])
+
+            @jax.checkpoint
+            def outer_body(x, gp_outer):
+                x, auxs = jax.lax.scan(group_body, x, gp_outer)
+                return x, jnp.sum(auxs)
+
+            x, auxs = jax.lax.scan(outer_body, x, inner_groups)
+            aux_total = jnp.sum(auxs)
+        elif cfg.scan_layers:
+            x, auxs = jax.lax.scan(
+                lambda c, gp: group_body(c, gp), x, params["groups"])
+            aux_total = jnp.sum(auxs)
+        else:
+            aux_total = jnp.zeros((), jnp.float32)
+            for g in range(G):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                x, a = group_body(x, gp)
+                aux_total = aux_total + a
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+    for i, p in enumerate(params["tail"]):
+        x, a = _block_apply(p, cfg.block_pattern[i], x, cfg, positions, ctx)
+        aux_total = aux_total + a
+
+    _, norm = layers.make_norm(cfg.norm_type)
+    return norm(params["final_norm"], x), aux_total
+
+
+def _head_weight(params):
+    return params.get("head", params["embed"])
+
+
+def logits_fn(params, cfg, x, ctx=None):
+    """Hidden -> logits (f32), vocab sharded over model."""
+    w = _head_weight(params)
+    out = jnp.einsum("bsd,vd->bsv", x, w).astype(jnp.float32)
+    out = layers.softcap(out, cfg.logit_softcap)
+    if ctx is not None:
+        out = constrain(out, ctx, ctx.dp, None, ctx.model_axis)
+    return out
+
+
+def loss_fn(params, cfg, batch, ctx=None):
+    """Mean next-token cross-entropy with chunked logits."""
+    x, aux = forward(params, cfg, batch, ctx)
+    labels = batch["labels"]
+    B, S = labels.shape
+    c = min(cfg.ce_chunk, S)
+    nc = S // c
+    assert S % c == 0, (S, c)
+    w = _head_weight(params)
+
+    def chunk_nll(ci):
+        xs = jax.lax.dynamic_slice_in_dim(x, ci * c, c, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, ci * c, c, axis=1)
+        logits = jnp.einsum("bsd,vd->bsv", xs, w).astype(jnp.float32)
+        logits = layers.softcap(logits, cfg.logit_softcap)
+        if ctx is not None:
+            logits = constrain(logits, ctx, ctx.dp, None, ctx.model_axis)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    nll = jnp.sum(jax.lax.map(chunk_nll, jnp.arange(nc)))
+    return nll / (B * S) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _slot_state(cfg, kind, batch, max_len, dtype):
+    if kind in ("attn", "local_attn"):
+        w = cfg.window if kind == "local_attn" else 0
+        return attention.cache_init(cfg, batch, max_len, dtype, window=w)
+    if kind == "rglru":
+        return rglru.state_init(cfg, batch, dtype)
+    if kind == "rwkv6":
+        return rwkv6.state_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def state_init(cfg, batch, max_len, dtype=None):
+    """Decode-state pytree, mirroring the params' scan-group structure:
+    {"groups": [per-slot state stacked over G], "tail": [per-layer state]}.
+    The stacked layout lets prefill/decode scan over layer groups (compile
+    time O(pattern), not O(layers) -- same trick as forward())."""
+    dtype = dtype or layers.dtype_of(cfg.compute_dtype)
+    pat = cfg.block_pattern
+    G = cfg.num_layers // len(pat)
+    rem = cfg.num_layers % len(pat)
+    groups = []
+    if G:
+        for kind in pat:
+            one = _slot_state(cfg, kind, batch, max_len, dtype)
+            groups.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (G,) + a.shape), one))
+    tail = [_slot_state(cfg, pat[i], batch, max_len, dtype)
+            for i in range(rem)]
+    return {"groups": groups, "tail": tail}
+
+
+def _block_prefill(p, kind, x, cfg, positions, ctx, max_len, dtype):
+    """One block over the full sequence, also emitting its decode state."""
+    B, S = x.shape[:2]
+    _, norm = layers.make_norm(cfg.norm_type)
+    h = norm(p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        w = cfg.window if kind == "local_attn" else 0
+        q, k, v = attention._project(p["mixer"], h, cfg, positions)
+        cache = attention.cache_init(cfg, B, max_len, dtype, window=w)
+        L = cache["k"].shape[1]
+        if S >= L:
+            ck = k[:, S - L:]
+            cv = v[:, S - L:]
+            if w:  # ring-buffer order: position p lives at slot p % L
+                ck = jnp.roll(ck, S % L, axis=1)
+                cv = jnp.roll(cv, S % L, axis=1)
+            st = {"k": ck.astype(dtype), "v": cv.astype(dtype)}
+        else:
+            st = {"k": jax.lax.dynamic_update_slice_in_dim(
+                      cache["k"], k.astype(dtype), 0, axis=1),
+                  "v": jax.lax.dynamic_update_slice_in_dim(
+                      cache["v"], v.astype(dtype), 0, axis=1)}
+        scale = 1.0 / np.sqrt(cfg.head_dim)
+        mix = attention._chunked_causal(
+            q, k, v, chunk=cfg.attn_chunk, window=w,
+            softcap_val=cfg.logit_softcap, scale=scale)
+        mix = mix.reshape(B, S, cfg.q_dim) @ p["mixer"]["wo"]
+    elif kind == "rglru":
+        mix, st = _rglru_prefill(p["mixer"], h, cfg)
+    elif kind == "rwkv6":
+        mix, st = _rwkv6_prefill(p["mixer"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    h = norm(p["norm2"], x)
+    if "moe" in p:
+        f, _ = moe.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        f = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    x = x + f
+    if ctx is not None:
+        x = constrain(x, ctx, ctx.dp, None, None)
+    return x, st
+
+
+def _block_decode(p, kind, x, cfg, state, pos, ctx):
+    """One block over a single token, advancing its decode state."""
+    _, norm = layers.make_norm(cfg.norm_type)
+    h = norm(p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        w = cfg.window if kind == "local_attn" else 0
+        mix, st = attention.decode_step(p["mixer"], h, cfg, state, pos,
+                                        window=w)
+    elif kind == "rglru":
+        mix, st = rglru.rglru_step(p["mixer"], h, cfg, state)
+    elif kind == "rwkv6":
+        mix, st = rwkv6.rwkv6_step(p["mixer"], h, cfg, state)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    h = norm(p["norm2"], x)
+    if "moe" in p:
+        f, _ = moe.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        f = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x + f, st
+
+
+def _embed_in(params, cfg, batch, dtype):
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = params["embed"][batch["tokens"]].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def decode_step(params, cfg, batch, states, pos, ctx=None):
+    """One-token decode.  batch: {"tokens": (B, 1)} or {"embeds": (B,1,d)};
+    states: from state_init/prefill; pos: scalar int32 current position.
+    Scans over layer groups (stacked states)."""
+    dtype = layers.dtype_of(cfg.compute_dtype)
+    x = _embed_in(params, cfg, batch, dtype)
+    pat = cfg.block_pattern
+    G = cfg.num_layers // len(pat)
+    _, norm = layers.make_norm(cfg.norm_type)
+
+    def group_body(x, inp):
+        gparams, gstates = inp
+        new_sts = []
+        for slot, kind in enumerate(pat):
+            x, st = _block_decode(gparams[slot], kind, x, cfg,
+                                  gstates[slot], pos, ctx)
+            new_sts.append(st)
+        return x, new_sts
+
+    if G:
+        x, new_groups = jax.lax.scan(group_body, x,
+                                     (params["groups"], states["groups"]))
+    else:
+        new_groups = []
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, st = _block_decode(p, pat[i], x, cfg, states["tail"][i], pos, ctx)
+        new_tail.append(st)
+    x = norm(params["final_norm"], x)
+    logits = logits_fn(params, cfg, x, ctx)[:, -1]
+    return logits, {"groups": new_groups, "tail": new_tail}
+
+
+def prefill(params, cfg, batch, max_len, ctx=None):
+    """Full-sequence prefill: (last-position logits, decode states).
+    Scans over layer groups; per-slot states come out stacked over G."""
+    dtype = layers.dtype_of(cfg.compute_dtype)
+    x = _embed_in(params, cfg, batch, dtype)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pat = cfg.block_pattern
+    G = cfg.num_layers // len(pat)
+    _, norm = layers.make_norm(cfg.norm_type)
+
+    def group_body(x, gparams):
+        sts = []
+        for slot, kind in enumerate(pat):
+            x, st = _block_prefill(gparams[slot], kind, x, cfg, positions,
+                                   ctx, max_len, dtype)
+            sts.append(st)
+        return x, sts
+
+    if G:
+        x, group_states = jax.lax.scan(group_body, x, params["groups"])
+    else:
+        group_states = []
+    tail_states = []
+    for i, p in enumerate(params["tail"]):
+        x, st = _block_prefill(p, pat[i], x, cfg, positions, ctx, max_len,
+                               dtype)
+        tail_states.append(st)
+    x = norm(params["final_norm"], x)
+    logits = logits_fn(params, cfg, x[:, -1:], ctx)
+    return logits[:, -1], {"groups": group_states, "tail": tail_states}
+
+
+def _rglru_prefill(p, x, cfg):
+    """rglru_apply's math + final (h, conv-tail) state, computed once."""
+    gate = jax.nn.gelu(x.astype(jnp.float32) @
+                       p["w_gate"].astype(jnp.float32))
+    ub = x @ p["w_branch"]
+    u = rglru._causal_conv(p, ub)
+    a, gin = rglru._gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    out = (gate * h).astype(x.dtype) @ p["w_out"]
+    return out, {"h": h[:, -1], "conv": ub[:, -(rglru.CONV_W - 1):]}
+
+
+def _rwkv6_prefill(p, x, cfg):
+    """rwkv6_apply + final state extraction (rerun scan keeping last S)."""
+    B, T, d = x.shape
+    D = cfg.rwkv_head_dim
+    H = d // D
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mixed = rwkv6._ddlerp(p, x, x_prev)
+    r, k, v, g, w = rwkv6._streams(p, mixed, H, D, x.dtype)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        S_new, y = rwkv6._mix_step(S, r_t, k_t, v_t, w_t, p["u"])
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    S_last, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    y = rwkv6._head_norm(p, y) * g.astype(jnp.float32)
+    out = y.reshape(B, T, d).astype(x.dtype) @ p["w_o"]
+    return out, {"S": S_last, "x_prev": x[:, -1]}

@@ -1,0 +1,187 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style top-k routing with capacity).
+
+Two code paths sharing the routing/dispatch math:
+
+  * `_moe_local` -- single-device: scatter into an (E, C, d) buffer,
+    batched expert einsum, gather+combine.
+  * `_moe_sharded` -- production path under `shard_map` (EP + SP):
+      1. activations enter data-sharded; each model-rank takes its sequence
+         slice (sequence parallelism) so routing work is fully partitioned,
+      2. local dispatch into (E, C_loc, d),
+      3. all-to-all over "model" swaps (expert <-> token) ownership
+         (the canonical MoE collective, visible in the dry-run analysis),
+      4. batched FFN over the rank's E/n_model experts (weights enter
+         ZeRO-gathered via in_specs),
+      5. reverse all-to-all, local combine, all-gather the sequence slices.
+
+Capacity C = ceil(tokens * top_k / E * capacity_factor); overflow tokens are
+dropped (GShard semantics).  Router math is f32; aux load-balance loss
+(Switch) is returned alongside.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d, ff = cfg.d_model, cfg.d_ff
+    kr, ke, ks = jax.random.split(key, 3)
+    gated = cfg.mlp_type in layers.GATED
+    wi_out = 2 * ff if gated else ff
+    keys = jax.random.split(ke, 2)
+    p = {
+        "router": layers.dense_init(kr, d, m.num_experts, jnp.float32),
+        "wi": (jax.random.normal(keys[0], (m.num_experts, d, wi_out),
+                                 jnp.float32) / np.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(keys[1], (m.num_experts, ff, d),
+                                 jnp.float32) / np.sqrt(ff)).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.mlp_init(ks, d, ff * m.num_shared_experts,
+                                      cfg.mlp_type, dtype)
+    return p
+
+
+def _expert_ffn(wi, wo, xe, kind):
+    """Batched expert MLP.  xe: (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    if kind in layers.GATED:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = layers.GATED[kind](g.astype(jnp.float32)).astype(xe.dtype) * u
+    else:
+        h = layers.PLAIN[kind](h.astype(jnp.float32)).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _route(router, xt, m):
+    """xt: (T, d) -> (gate_vals (T,k), expert_ids (T,k), probs (T,E))."""
+    logits = xt.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    return gate_vals, expert_ids, probs
+
+
+def _dispatch_indices(expert_ids, E, C):
+    """Deterministic position-in-expert via exclusive cumsum over the
+    flattened (token, slot) order.  Returns (eid, cid, keep)."""
+    Tk = expert_ids.size
+    flat_ids = expert_ids.reshape(Tk)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)      # (Tk, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (Tk,)
+    keep = pos < C
+    return flat_ids, pos, keep
+
+
+def _dispatch_combine(p_router, wi, wo, xt, m, kind, cross_expert_fn=None):
+    """Shared dispatch -> FFN -> combine on local tokens xt: (T, d).
+
+    cross_expert_fn: optional hook applied to the (E, C, d) buffer (the
+    sharded path passes the all-to-all sandwich here)."""
+    T, d = xt.shape
+    E, k = m.num_experts, m.top_k
+    C = max(int(np.ceil(T * k / E * m.capacity_factor)), 1)
+
+    gate_vals, expert_ids, probs = _route(p_router, xt, m)
+    eid, cid, keep = _dispatch_indices(expert_ids, E, C)
+
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    src = jnp.repeat(xt, k, axis=0)
+    e_idx = jnp.where(keep, eid, E)   # dropped -> OOB, mode="drop"
+    c_idx = jnp.where(keep, cid, C)
+    buf = buf.at[e_idx, c_idx].set(src, mode="drop")
+
+    if cross_expert_fn is None:
+        out_e = _expert_ffn(wi, wo, buf, kind)
+    else:
+        out_e = cross_expert_fn(buf)
+
+    tok_out = out_e[jnp.minimum(e_idx, E - 1), jnp.minimum(c_idx, C - 1)]
+    tok_out = jnp.where(keep[:, None], tok_out, 0.0)
+    w = (gate_vals.reshape(T * k) * keep).astype(jnp.float32)
+    out = jnp.sum((tok_out.astype(jnp.float32)
+                   * w[:, None]).reshape(T, k, d), axis=1).astype(xt.dtype)
+
+    # Switch aux loss terms (summed, normalized by caller)
+    f_e = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32),
+                   axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e) * m.router_aux_weight
+    return out, aux
+
+
+def _moe_local(p, x, cfg):
+    B, S, d = x.shape
+    out, aux = _dispatch_combine(p["router"], p["wi"], p["wo"],
+                                 x.reshape(B * S, d), cfg.moe, cfg.mlp_type)
+    out = out.reshape(B, S, d)
+    if cfg.moe.num_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], x, cfg.mlp_type)
+    return out, aux
+
+
+def _moe_sharded(p, x, cfg, ctx):
+    m = cfg.moe
+    nm = ctx.n_model
+    B, S, d = x.shape
+    if m.num_experts % nm:
+        raise ValueError(f"experts {m.num_experts} % model axis {nm}")
+    use_sp = S % nm == 0 and S >= nm and nm > 1
+    maxis = ctx.model_axis
+
+    def body(router, wi, wo, shared, x_loc):
+        if use_sp:
+            r = jax.lax.axis_index(maxis)
+            xs = jax.lax.dynamic_slice_in_dim(x_loc, r * (S // nm),
+                                              S // nm, axis=1)
+        else:
+            xs = x_loc
+        bl, sl, _ = xs.shape
+
+        def cross_expert(buf):
+            # (E, C, d) -> rank's experts with everyone's tokens -> back
+            buf = jax.lax.all_to_all(buf, maxis, split_axis=0,
+                                     concat_axis=1, tiled=True)
+            out_e = _expert_ffn(wi, wo, buf, cfg.mlp_type)
+            return jax.lax.all_to_all(out_e, maxis, split_axis=1,
+                                      concat_axis=0, tiled=True)
+
+        out, aux = _dispatch_combine(router, wi, wo, xs.reshape(bl * sl, d),
+                                     m, cfg.mlp_type,
+                                     cross_expert_fn=cross_expert)
+        out = out.reshape(bl, sl, d)
+        if m.num_shared_experts:
+            out = out + layers.mlp_apply(shared, xs, cfg.mlp_type)
+        if use_sp:
+            out = jax.lax.all_gather(out, maxis, axis=1, tiled=True)
+        axes = tuple(ctx.dp_axes) + (maxis,)
+        aux = jax.lax.pmean(aux, axes)
+        return out, aux
+
+    dp = ctx.dp
+    shared = p.get("shared")
+    shared_spec = None if shared is None else jax.tree.map(lambda _: P(),
+                                                           shared)
+    fn = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), P(maxis, None, None), P(maxis, None, None),
+                  shared_spec, P(dp, None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )
+    return fn(p["router"], p["wi"], p["wo"], shared, x)
+
+
+def moe_apply(p, x, cfg, ctx=None):
+    """x: (B, S, d) -> (out, aux_loss).  Sharded EP/SP path iff ctx given."""
+    if ctx is None:
+        return _moe_local(p, x, cfg)
+    return _moe_sharded(p, x, cfg, ctx)

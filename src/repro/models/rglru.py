@@ -1,0 +1,108 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU + temporal conv).
+
+Block (De et al., arXiv:2402.19427):
+    x -> [gelu(W_gate x)] * RGLRU(conv1d_4(W_branch x)) -> W_out
+
+RG-LRU (diagonal gated linear recurrence):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal => associative: training uses jax.lax.associative_scan (O(log S)
+depth); decode carries (h, conv tail) state.  All recurrence math in f32.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+C_GATE = 8.0
+CONV_W = 4
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": layers.dense_init(ks[0], d, d, dtype),
+        "w_branch": layers.dense_init(ks[1], d, d, dtype),
+        "conv": (jax.random.normal(ks[2], (CONV_W, d), jnp.float32)
+                 * 0.1).astype(dtype),
+        "w_a": layers.dense_init(ks[3], d, d, dtype),
+        "b_a": jnp.zeros((d,), jnp.float32),
+        "w_x": layers.dense_init(ks[4], d, d, dtype),
+        "b_x": jnp.zeros((d,), jnp.float32),
+        # Lambda init so that a = sigmoid(Lambda)^c in ~[0.9, 0.999]
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.random.default_rng(0)
+                                    .uniform(0.9, 0.999, d) ** (1 / C_GATE)))),
+            jnp.float32),
+        "w_out": layers.dense_init(ks[5], d, d, dtype),
+    }
+
+
+def _gates(p, u):
+    """Per-step gate computation (f32).  u: (..., d) branch activations."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -C_GATE * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def _causal_conv(p, u):
+    """Width-4 causal depthwise temporal conv.  u: (B, S, d)."""
+    w = p["conv"].astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    pad = jnp.pad(uf, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + u.shape[1], :] * w[i] for i in range(CONV_W))
+    return out.astype(u.dtype)
+
+
+def rglru_apply(p, x, cfg):
+    """Full-sequence recurrent block.  x: (B, S, d)."""
+    gate = jax.nn.gelu(x.astype(jnp.float32) @
+                       p["w_gate"].astype(jnp.float32))
+    u = _causal_conv(p, x @ p["w_branch"])
+    a, gin = _gates(p, u)                                # (B, S, d) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    y = (gate * h).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def state_init(cfg, batch, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, d), dtype)}
+
+
+def rglru_step(p, x1, cfg, state):
+    """One-token decode.  x1: (B, 1, d)."""
+    gate = jax.nn.gelu(x1.astype(jnp.float32) @
+                       p["w_gate"].astype(jnp.float32))   # (B, 1, d)
+    ub = x1 @ p["w_branch"]                                # (B, 1, d)
+    hist = jnp.concatenate([state["conv"], ub], axis=1)    # (B, 4, d)
+    w = p["conv"].astype(jnp.float32)
+    u = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32), w)[:, None, :]
+    u = u.astype(x1.dtype)
+    a, gin = _gates(p, u)                                  # (B, 1, d)
+    h = a[:, 0] * state["h"] + gin[:, 0]
+    y = (gate[:, 0] * h).astype(x1.dtype)[:, None, :]
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return y @ p["w_out"], new_state

@@ -1,0 +1,143 @@
+"""RWKV-6 "Finch" time-mix layer (Peng et al., arXiv:2404.05892).
+
+The hallmark of RWKV-6 vs -5 is the *data-dependent* per-channel decay
+w_t = exp(-exp(w0 + tanh(x_w A_w) B_w)) driving a matrix-valued recurrence
+per head (head dim D, state S in R^{D x D}):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Token-shift uses RWKV's ddlerp: a shared lerp produces xxx, then per-stream
+(w, k, v, r, g) low-rank corrections select how much of the previous token
+each channel sees.  Per-head GroupNorm + silu(g) gating close the block.
+
+Training runs a lax.scan over time (the recurrence is NOT diagonal --
+associative_scan would need O(D^2) element state anyway, which is exactly
+what the scan carries; a chunked GLA-style kernel is the TPU upgrade path,
+see DESIGN.md).  Decode reuses the same step function.  All state math f32.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+LORA_RKVG = 32
+LORA_W = 64
+STREAMS = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_init(key, cfg, dtype):
+    d = cfg.d_model
+    D = cfg.rwkv_head_dim
+    H = d // D
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "w0": jnp.asarray(np.log(np.exp(1.0) - 0.0) * np.ones(d) * 0.0
+                          - 0.5, jnp.float32),  # mild initial decay
+        "u": (jax.random.normal(next(ks), (H, D), jnp.float32) * 0.1),
+        "w_r": layers.dense_init(next(ks), d, d, dtype),
+        "w_k": layers.dense_init(next(ks), d, d, dtype),
+        "w_v": layers.dense_init(next(ks), d, d, dtype),
+        "w_g": layers.dense_init(next(ks), d, d, dtype),
+        "w_o": layers.dense_init(next(ks), d, d, dtype),
+        "ln_scale": jnp.zeros((H, D), jnp.float32),
+    }
+    for s in STREAMS:
+        r = LORA_W if s == "w" else LORA_RKVG
+        p[f"mu_{s}"] = jnp.zeros((d,), jnp.float32)
+        p[f"A_{s}"] = layers.dense_init(next(ks), d, r, jnp.float32, scale=0.01)
+        p[f"B_{s}"] = layers.dense_init(next(ks), r, d, jnp.float32, scale=0.01)
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token shift.  x, x_prev: (..., d) -> dict of streams."""
+    xf = x.astype(jnp.float32)
+    dx = x_prev.astype(jnp.float32) - xf
+    xxx = xf + p["mu_x"] * dx
+    out = {}
+    for s in STREAMS:
+        lora = jnp.tanh(xxx @ p[f"A_{s}"]) @ p[f"B_{s}"]
+        out[s] = xf + dx * (p[f"mu_{s}"] + lora)
+    return out
+
+
+def _streams(p, mixed, H, D, dtype):
+    r = (mixed["r"].astype(dtype) @ p["w_r"])
+    k = (mixed["k"].astype(dtype) @ p["w_k"])
+    v = (mixed["v"].astype(dtype) @ p["w_v"])
+    g = jax.nn.silu(mixed["g"].astype(jnp.float32) @
+                    p["w_g"].astype(jnp.float32))
+    logw = -jnp.exp(p["w0"] + jnp.tanh(mixed["w"] @ p["A_w"]) @ p["B_w"])
+    shp = r.shape[:-1] + (H, D)
+    return (r.reshape(shp).astype(jnp.float32),
+            k.reshape(shp).astype(jnp.float32),
+            v.reshape(shp).astype(jnp.float32),
+            g.reshape(shp),
+            jnp.exp(logw).reshape(shp))  # w in (0, 1)
+
+
+def _head_norm(p, y):
+    """Per-head GroupNorm (f32).  y: (..., H, D)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + 1e-5) * (1.0 + p["ln_scale"])
+
+
+def _mix_step(S, r, k, v, w, u):
+    """One recurrence step.  S: (B, H, Dk, Dv); r/k/v/w: (B, H, D)."""
+    kv = k[..., :, None] * v[..., None, :]               # (B, H, Dk, Dv)
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., :, None] * S + kv
+    return S_new, y
+
+
+def rwkv6_apply(p, x, cfg):
+    """Full-sequence time mix.  x: (B, S, d)."""
+    B, T, d = x.shape
+    D = cfg.rwkv_head_dim
+    H = d // D
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mixed = _ddlerp(p, x, x_prev)
+    r, k, v, g, w = _streams(p, mixed, H, D, x.dtype)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        S_new, y = _mix_step(S, r_t, k_t, v_t, w_t, p["u"])
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    _, ys = jax.lax.scan(step, S0, xs)                   # (T, B, H, D)
+    y = jnp.moveaxis(ys, 0, 1)                           # (B, T, H, D)
+    y = _head_norm(p, y) * g.astype(jnp.float32)
+    return y.reshape(B, T, d).astype(x.dtype) @ p["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def state_init(cfg, batch, dtype):
+    d = cfg.d_model
+    D = cfg.rwkv_head_dim
+    return {"S": jnp.zeros((batch, d // D, D, D), jnp.float32),
+            "x_prev": jnp.zeros((batch, d), dtype)}
+
+
+def rwkv6_step(p, x1, cfg, state):
+    """One-token decode.  x1: (B, 1, d)."""
+    B, _, d = x1.shape
+    D = cfg.rwkv_head_dim
+    H = d // D
+    mixed = _ddlerp(p, x1[:, 0], state["x_prev"])
+    r, k, v, g, w = _streams(p, mixed, H, D, x1.dtype)
+    S_new, y = _mix_step(state["S"], r, k, v, w, p["u"])
+    y = _head_norm(p, y) * g.astype(jnp.float32)
+    y = y.reshape(B, 1, d).astype(x1.dtype) @ p["w_o"]
+    return y, {"S": S_new, "x_prev": x1[:, 0]}

@@ -1,0 +1,116 @@
+"""Sharding rules: logical parameter/activation layouts -> mesh axes.
+
+MaxText-style: one rules table maps parameter names (leaf path) to
+PartitionSpecs; `param_shardings` walks the params pytree (works on
+jax.eval_shape output, so no allocation).  Strategy (see DESIGN.md Sec. 6):
+
+  * FSDP/ZeRO-3: every large weight matrix shards its *non-TP* dimension
+    over the data axes ("pod","data") -- required to fit 340B/400B params.
+  * TP (Megatron): head / ffn / expert / vocab dimensions shard over
+    "model".
+  * Scanned layers carry a leading group axis G -> spec gets a leading None.
+  * Activations: batch over ("pod","data"); logits vocab over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context threaded through model code.  None => single-device."""
+    mesh: Mesh
+    dp_axes: tuple = ("data",)       # ("pod", "data") on the multi-pod mesh
+    model_axis: str = "model"
+
+    @property
+    def n_model(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def named(self, *spec):
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def constrain(x, ctx: ShardCtx | None, *spec):
+    """with_sharding_constraint when a mesh is present, else identity."""
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.named(*spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _rules(ctx: ShardCtx):
+    dp, mdl = ctx.dp, ctx.model_axis
+    return {
+        # name -> spec for the parameter's OWN rank (leading scan axes padded)
+        "embed": P(mdl, dp),           # (V, d): vocab TP, d FSDP
+        "head": P(mdl, dp),
+        "wq": P(dp, mdl), "wk": P(dp, mdl), "wv": P(dp, mdl),
+        "wo": P(mdl, dp),
+        "wi": P(dp, mdl),              # mlp in (d, ff*)
+        "router": P(dp, None),
+        "w_gate": P(dp, mdl), "w_branch": P(dp, mdl), "w_out": P(mdl, dp),
+        "w_a": P(dp, None), "w_x": P(dp, None),
+        "w_r": P(dp, mdl), "w_k": P(dp, mdl), "w_v": P(dp, mdl),
+        "w_g": P(dp, mdl), "w_o": P(mdl, dp),
+        "A_w": P(dp, None), "B_w": P(None, dp),
+        "A_k": P(dp, None), "B_k": P(None, dp),
+        "A_v": P(dp, None), "B_v": P(None, dp),
+        "A_r": P(dp, None), "B_r": P(None, dp),
+        "A_g": P(dp, None), "B_g": P(None, dp),
+    }
+
+
+_MOE_RULES = {
+    # experts shard over model (EP); inner dims FSDP over data
+    "wi": lambda dp, mdl: P(mdl, dp, None),
+    "wo": lambda dp, mdl: P(mdl, None, dp),
+}
+
+
+def _spec_for(path_keys, leaf_ndim, ctx: ShardCtx):
+    rules = _rules(ctx)
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path_keys]
+    name = names[-1]
+    in_moe = "moe" in names or "experts" in names
+    if in_moe and name in _MOE_RULES:
+        spec = _MOE_RULES[name](ctx.dp, ctx.model_axis)
+    elif name in rules:
+        spec = rules[name]
+    else:
+        return P()  # small params (norms, biases, gates): replicate
+    pad = leaf_ndim - len(spec)
+    if pad < 0:  # e.g. conv (W, d) matched nothing special
+        return P()
+    return P(*([None] * pad), *spec)
+
+
+def param_shardings(params_shape, ctx: ShardCtx):
+    """Spec pytree for a params pytree (shapes from jax.eval_shape)."""
+
+    def axsize(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            return ctx.mesh.shape[ax]
+        import numpy as np
+        return int(np.prod([ctx.mesh.shape[a] for a in ax]))
+
+    def one(path, leaf):
+        spec = _spec_for(path, len(leaf.shape), ctx)
+        # drop axes that do not divide evenly (tiny dims): replicate those
+        clean = [ax if ax is not None and dim % axsize(ax) == 0 else None
+                 for dim, ax in zip(leaf.shape, spec)]
+        return NamedSharding(ctx.mesh, P(*clean))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

@@ -1,0 +1,3 @@
+from .optimizers import (OptConfig, init_opt, apply_updates, opt_update,
+                         global_norm, clip_by_global_norm)
+from .schedules import cosine_schedule  # noqa: F401

@@ -1,0 +1,185 @@
+"""Optimizers as pure pytree transforms: AdamW and Adafactor.
+
+Mixed-precision contract: model params may be bf16; the optimizer keeps f32
+master weights (AdamW) or f32 factored statistics (Adafactor) and casts the
+updated master back to the param dtype.  Adafactor's factored second moment
+is the memory lever that lets nemotron-340B / llama4-400B optimizer state
+fit the pod (see EXPERIMENTS.md Sec. Dry-run): AdamW state is 8 bytes/param
++ 4 master, Adafactor ~4 bytes/param (master) + O(rows+cols).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        # + 0.0 forces a fresh buffer: master must not alias the
+        # (donatable) param buffers; also works under jax.eval_shape
+        "master": jax.tree.map(
+            lambda p: p.astype(jnp.float32) + 0.0, params),
+    }
+
+
+def _adamw_update(grads32, state, params, lr, cfg: OptConfig):
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p, master):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        m_hat = mu / c1
+        v_hat = nu / c2
+        new = master - lr * (m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+                             + cfg.weight_decay * master)
+        return new, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads32)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_ma = tdef.flatten_up_to(state["master"])
+
+    new_p, new_mu, new_nu, new_ma = [], [], [], []
+    for g, mu, nu, p, ma in zip(flat_g, flat_mu, flat_nu, flat_p, flat_ma):
+        new, mu2, nu2 = upd(g, mu, nu, p, ma)
+        new_p.append(new.astype(p.dtype))
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+        new_ma.append(new)
+
+    params2 = jax.tree.unflatten(tdef, new_p)
+    state2 = {"step": step,
+              "mu": jax.tree.unflatten(tdef, new_mu),
+              "nu": jax.tree.unflatten(tdef, new_nu),
+              "master": jax.tree.unflatten(tdef, new_ma)}
+    return params2, state2
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moments
+# ---------------------------------------------------------------------------
+
+def _adafactor_init(params):
+    def stats(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "stats": jax.tree.map(stats, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        "master": jax.tree.map(
+            lambda p: p.astype(jnp.float32) + 0.0, params),
+    }
+
+
+def _adafactor_update(grads32, state, params, lr, cfg: OptConfig):
+    step = state["step"] + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(g, st, p, master):
+        if p.ndim >= 2:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g * g + eps, -1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g * g + eps, -2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, -1, keepdims=True)[..., None],
+                                   eps))
+            u = g * jax.lax.rsqrt(denom + eps)
+            st2 = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * (g * g + eps)
+            u = g * jax.lax.rsqrt(v + eps)
+            st2 = {"v": v}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        new = master - lr * (u + cfg.weight_decay * master)
+        return new, st2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads32)
+    flat_st = tdef.flatten_up_to(state["stats"])
+    flat_ma = tdef.flatten_up_to(state["master"])
+
+    new_p, new_st, new_ma = [], [], []
+    for g, st, p, ma in zip(flat_g, flat_st, flat_p, flat_ma):
+        new, st2 = upd(g, st, p, ma)
+        new_p.append(new.astype(p.dtype))
+        new_st.append(st2)
+        new_ma.append(new)
+
+    params2 = jax.tree.unflatten(tdef, new_p)
+    state2 = {"step": step,
+              "stats": jax.tree.unflatten(tdef, new_st),
+              "master": jax.tree.unflatten(tdef, new_ma)}
+    return params2, state2
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def init_opt(cfg: OptConfig, params):
+    if cfg.name == "adamw":
+        return _adamw_init(params)
+    if cfg.name == "adafactor":
+        return _adafactor_init(params)
+    raise ValueError(cfg.name)
+
+
+def opt_update(cfg: OptConfig, grads, state, params, lr):
+    """grads may be any float dtype; clipping + update in f32.
+    Returns (new_params, new_state, grad_norm)."""
+    grads32, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adamw":
+        params2, state2 = _adamw_update(grads32, state, params, lr, cfg)
+    elif cfg.name == "adafactor":
+        params2, state2 = _adafactor_update(grads32, state, params, lr, cfg)
+    else:
+        raise ValueError(cfg.name)
+    return params2, state2, gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

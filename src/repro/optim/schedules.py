@@ -1,0 +1,15 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, decay_steps,
+                    min_ratio=0.1):
+    """Linear warmup then cosine decay to min_ratio * peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)

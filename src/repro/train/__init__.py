@@ -1,0 +1,2 @@
+from .trainer import TrainConfig, Trainer, make_train_step  # noqa: F401
+from . import compress, pipeline, straggler  # noqa: F401

@@ -1,0 +1,96 @@
+"""Gradient compression with error feedback (1-bit-Adam / EF-SGD family).
+
+Two layers:
+
+  * :func:`ef_quantize` / :func:`ef_dequantize` -- blockwise symmetric int8
+    quantization with an error-feedback residual: the quantization error of
+    step t is added back to the gradient of step t+1, so the compression
+    bias vanishes over time (Karimireddy et al. 2019).
+  * :func:`compressed_allreduce` -- the collective, for shard_map code:
+    reduce-scatter in f32 (the summation must happen at full precision),
+    then all-gather the int8-quantized shard sums + per-shard scales.
+    Wire bytes: (1/n + (n-1)/(4n)) * size*4 vs 2*size*4 for ring all-reduce
+    -- a ~1.6x reduction concentrated on the broadcast phase.
+  * :func:`ef_roundtrip` -- single-device wire-format simulation used by the
+    Trainer's `grad_compression="int8"` option under pjit (where XLA owns
+    the all-reduce): gradients go through quantize->dequantize with error
+    feedback, so convergence behavior matches the compressed deployment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _blockify(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, BLOCK), pad
+
+
+def ef_quantize(g, err):
+    """g: f32 array; err: same-shape error-feedback residual.
+    Returns (q int8 blocks, scales f32, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    blocks, pad = _blockify(g32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    deq = deq[: g.size].reshape(g.shape) if pad else deq.reshape(g.shape)
+    new_err = g32 - deq
+    return q, scale[:, 0], new_err
+
+
+def ef_dequantize(q, scale, shape):
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape)
+
+
+def ef_roundtrip(g, err):
+    """Quantize+dequantize with error feedback (wire-format simulation)."""
+    q, scale, new_err = ef_quantize(g, err)
+    return ef_dequantize(q, scale, g.shape), new_err
+
+
+def init_error_state(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def compress_grads(grads, err_state):
+    """Trainer hook: EF-int8 roundtrip on every gradient leaf."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs = [ef_roundtrip(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+# ---------------------------------------------------------------------------
+# collective (shard_map-level)
+# ---------------------------------------------------------------------------
+
+def compressed_allreduce(x, axis_name, err):
+    """All-reduce for shard_map bodies: f32 reduce-scatter + int8 all-gather.
+
+    x: identically-shaped f32 array on every rank of `axis_name`;
+    err: per-rank error-feedback residual for x's OWN scatter shard
+         (shape = x.shape with leading dim / n).
+    Returns (summed x on every rank, new_err).
+    """
+    n = jax.lax.axis_size(axis_name)
+    shard = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                 tiled=True)            # (lead/n, ...) f32
+    q, scale, new_err = ef_quantize(shard, err)
+    qg = jax.lax.all_gather(q, axis_name)               # (n, nb, BLOCK) int8
+    sg = jax.lax.all_gather(scale, axis_name)           # (n, nb)
+    deq = qg.astype(jnp.float32) * sg[..., None]        # per-shard blocks
+    deq = deq.reshape(n, -1)[:, : shard.size]           # strip per-shard pad
+    full = deq.reshape((x.shape[0],) + x.shape[1:])
+    return full, new_err

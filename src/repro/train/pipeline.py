@@ -1,0 +1,103 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN.md §6 PP).
+
+The layer stack is split into `n_stage` contiguous segments, one per rank
+of the pipeline axis (the "pod" axis on the multi-pod mesh).  Microbatches
+stream through stages in the classic GPipe schedule: at tick t, stage s
+processes microbatch t - s; activations move stage->stage with a single
+`ppermute` per tick.  Bubble fraction = (S-1)/(T+S-1) for S stages and T
+microbatches -- pick T >= 4*S in practice.
+
+Implementation notes (shard_map SPMD):
+  * every rank executes the same program; a rank applies ITS stage's
+    params (in_specs shard the stacked layer axis over the pipe axis);
+  * ticks run T + S - 1 times; a rank computes only when its current
+    slot holds a live microbatch -- jnp.where masks keep it SPMD-uniform
+    (idle ranks compute on garbage and discard, the standard trick);
+  * outputs collect on the LAST stage, then one final ppermute ring
+    returns them to stage 0 order... we instead all_gather the (small)
+    per-microbatch outputs stacked on the last stage.
+
+This module is deliberately self-contained (a stage function + params
+pytree in, a pipelined function out) so it composes with any per-stage
+computation; tests/test_distributed.py runs a 4-stage pipeline on 8 fake
+devices and checks exact equality with the sequential program, plus the
+bubble-schedule tick count.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, params_stacked, x_mb, *, mesh, axis="pod"):
+    """Run a GPipe pipeline.
+
+    stage_fn(stage_params, x) -> x  : one stage's computation (layers of
+        one segment), applied by every rank to its local stage params.
+    params_stacked: pytree with leading axis n_stage (segment-major).
+    x_mb: (T, mb, ...) microbatched inputs (T divisible by nothing needed).
+    Returns (T, mb, ...) outputs equal to sequentially applying all stages.
+    """
+    S = mesh.shape[axis]
+    T = x_mb.shape[0]
+    ticks = T + S - 1
+
+    def body(stage_params, xs):
+        rank = jax.lax.axis_index(axis)
+        sp = jax.tree.map(lambda a: a[0], stage_params)  # local stage
+        buf = jnp.zeros_like(xs[0])          # current slot activation
+        outs = jnp.zeros_like(xs)            # collected on last stage
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if still live)
+            mb_idx = jnp.clip(t, 0, T - 1)
+            fresh = jnp.where(t < T, xs[mb_idx], jnp.zeros_like(buf))
+            cur = jnp.where(rank == 0, fresh, buf)
+            # every rank applies its stage
+            y = stage_fn(sp, cur)
+            # last stage: microbatch t - (S-1) completes at tick t
+            done_idx = jnp.clip(t - (S - 1), 0, T - 1)
+            live = jnp.logical_and(t - (S - 1) >= 0, rank == S - 1)
+            outs = jax.lax.cond(
+                live,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, done_idx, 0),
+                lambda o: o, outs)
+            # shift activations to the next stage
+            buf = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % S) for i in range(S)])
+            return (buf, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
+        # broadcast results (held on the last stage) to all ranks
+        outs = jax.lax.psum(
+            jnp.where(rank == S - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params_stacked, x_mb)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead: (S-1) / (T+S-1)."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def split_stages(params_stacked, n_stages: int):
+    """(L, ...) stacked layer params -> (S, L/S, ...) segment-major."""
+    def re(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+    return jax.tree.map(re, params_stacked)

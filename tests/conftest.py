@@ -1,0 +1,15 @@
+"""Test configuration.
+
+f64 is enabled globally: the SO(3) transform accuracy tests reproduce the
+paper's Table-1 error magnitudes (1e-13..1e-14), which require double
+precision.  LM-model code uses explicit dtypes throughout, and
+tests/test_arch_smoke.py asserts outputs stay in the configured dtype, so
+the global flag cannot silently promote model compute.
+
+NOTE: XLA_FLAGS device-count overrides are deliberately NOT set here --
+tests see the real single CPU device; multi-device tests spawn subprocesses
+(see tests/test_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

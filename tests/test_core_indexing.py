@@ -1,0 +1,77 @@
+"""The paper's index maps: sigma (Eq. 7/8) and the geometric kappa fold
+(Fig. 1) -- bijectivity, inverse consistency, integer-only reconstruction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import indexing
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 200))
+def test_sigma_roundtrip(B):
+    ms, mps = [], []
+    for m in range(B):
+        for mp in range(m + 1):
+            ms.append(m), mps.append(mp)
+    m = np.array(ms)
+    mp = np.array(mps)
+    sig = indexing.sigma_index(m, mp)
+    assert sig.min() == 0 and sig.max() == B * (B + 1) // 2 - 1
+    m2, mp2 = indexing.sigma_to_mm(sig)
+    np.testing.assert_array_equal(m, m2)
+    np.testing.assert_array_equal(mp, mp2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(3, 300))
+def test_kappa_fold_bijective(B):
+    """regular_pairs enumerates {1 <= m' < m <= B-1} exactly once (both
+    parities of B, including the odd-B half-row)."""
+    pairs = indexing.regular_pairs(B)
+    assert len(pairs) == indexing.kappa_domain_size(B)
+    seen = set(map(tuple, pairs.tolist()))
+    expect = {(m, mp) for m in range(2, B) for mp in range(1, m)}
+    assert seen == expect
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(3, 300), st.data())
+def test_kappa_inverse(B, data):
+    m = data.draw(st.integers(2, B - 1))
+    mp = data.draw(st.integers(1, m - 1))
+    kap = indexing.mm_to_kappa(m, mp, B)
+    m2, mp2 = indexing.kappa_to_mm(kap, B)
+    assert (int(m2), int(mp2)) == (m, mp)
+
+
+def test_fold_pairs_heavy_with_light():
+    """The fold's load-balancing property (DESIGN.md P3): within rectangle
+    row i, cells carry work B-1-i (original) or i (mirrored); one cell of
+    each kind sums to the constant B-1."""
+    B = 64
+    K = ((B - 1) // 2) * (B - 1)
+    kap = np.arange(K)
+    i, j = indexing.kappa_to_ij(kap, B)
+    m, _ = indexing.ij_to_mm(i, j, B)
+    work = B - m  # l-extent of the cluster
+    # exact fold identity: work = B-1-i on original cells, i on mirrored ones
+    np.testing.assert_array_equal(work[j <= i], (B - 1 - i)[j <= i])
+    np.testing.assert_array_equal(work[j > i], i[j > i])
+    # so an (original, mirrored) cell pair from the same row sums to B-1
+    assert np.all((B - 1 - i) + i == B - 1)
+
+
+def test_static_schedule_balance():
+    """Static SPMD schedules replacing OpenMP schedule(dynamic), cf.
+    DESIGN.md P3: plain strided kappa lands ~10% imbalanced at B=512/64
+    shards; sorted round-robin (balanced_order) is balanced to <0.1%."""
+    B, n = 512, 64
+    pairs = indexing.regular_pairs(B)
+    work = B - pairs[:, 0]
+    strided = np.array([work[s::n].sum() for s in range(n)])
+    assert 1.05 < strided.max() / strided.mean() < 1.15
+
+    perm = indexing.balanced_order(work, n)
+    dealt = np.array([work[perm[s::n]].sum() for s in range(n)])
+    assert dealt.max() / dealt.mean() < 1.001

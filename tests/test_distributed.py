@@ -1,0 +1,42 @@
+"""Multi-device tests.  Each case runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=N so the main pytest
+process keeps seeing the real single CPU device (per the dry-run contract:
+only launch/dryrun.py and these subprocesses fake device counts)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+PROGS = pathlib.Path(__file__).parent / "progs"
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def run_prog(name: str, timeout=900, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(env_extra or {})
+    proc = subprocess.run([sys.executable, str(PROGS / name)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"{name} failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+def test_distributed_soft_roundtrip():
+    out = run_prog("dist_soft.py")
+    assert "DIST_SOFT_OK" in out
+
+
+def test_compressed_allreduce():
+    out = run_prog("dist_compress.py")
+    assert "DIST_COMPRESS_OK" in out
+
+
+def test_pipeline_parallel():
+    """4-stage GPipe over the pod axis == sequential execution."""
+    out = run_prog("dist_pipeline.py")
+    assert "DIST_PIPELINE_OK" in out

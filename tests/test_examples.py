@@ -1,0 +1,47 @@
+"""Examples run end-to-end (subprocess; small settings)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_example(script, *args, timeout=560):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script), *args],
+        capture_output=True, text=True, timeout=timeout, cwd=str(ROOT),
+        env=env)
+    assert proc.returncode == 0, (
+        f"--- stdout ---\n{proc.stdout[-3000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py", "--bandwidth", "8")
+    assert "OK" in out
+
+
+def test_rotational_matching():
+    out = run_example("rotational_matching.py", "--bandwidth", "12")
+    assert "rotation recovered" in out
+
+
+def test_train_lm_tiny(tmp_path):
+    # fresh ckpt dir: the trainer auto-RESUMES from existing checkpoints
+    # (that behavior has its own tests in test_fault_tolerance.py)
+    out = run_example("train_lm.py", "--preset", "tiny", "--steps", "60",
+                      "--ckpt-dir", str(tmp_path / "ckpt"))
+    assert "OK: loss decreased" in out
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-9b"])
+def test_serve_lm(arch):
+    out = run_example("serve_lm.py", "--arch", arch, "--tokens", "8",
+                      "--prompt-len", "16")
+    assert "OK" in out

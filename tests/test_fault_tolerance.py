@@ -1,0 +1,154 @@
+"""Fault tolerance: trainer crash/restore, preemption replay determinism,
+elastic resharding, straggler policy state machine."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro import ckpt as ckptlib
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+from repro.train.straggler import StragglerPolicy, WorkerState, largest_mesh
+
+
+def tiny_setup(tmp_path, steps=8, **kw):
+    cfg = configs.reduced("smollm-135m")
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, num_heads=2,
+                              num_kv_heads=1, head_dim=32, d_ff=128,
+                              vocab_size=128)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=2)
+    tcfg = TrainConfig(steps=steps, ckpt_every=2, ckpt_dir=str(tmp_path),
+                       keep_ckpts=3,
+                       opt=OptConfig(peak_lr=1e-3, warmup_steps=2,
+                                     decay_steps=100), **kw)
+    return cfg, tcfg, SyntheticLM(dcfg)
+
+
+def test_trainer_runs_and_loss_decreases(tmp_path):
+    cfg, tcfg, data = tiny_setup(tmp_path, steps=12)
+    tr = Trainer(cfg, tcfg, data)
+    tr.run()
+    losses = [h["loss"] for h in tr.history if "loss" in h]
+    assert len(losses) == 12
+    assert losses[-1] < losses[0]  # synthetic data is learnable (unigram)
+
+
+def test_trainer_recovers_from_crash(tmp_path):
+    """A simulated node failure at step 5 restores from the step-4 ckpt and
+    completes; the metric history shows the restart."""
+    cfg, tcfg, data = tiny_setup(tmp_path, steps=8)
+    crashed = {"done": False}
+
+    def fail_hook(step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("simulated node failure")
+
+    tr = Trainer(cfg, tcfg, data)
+    tr.run(fail_hook=fail_hook)
+    events = [h for h in tr.history if "event" in h]
+    assert len(events) == 1 and "simulated node failure" in events[0]["event"]
+    steps_seen = [h["step"] for h in tr.history if "loss" in h]
+    # the failed attempt logged no loss; after restore-from-step-4 the run
+    # resumes at 5 -- every step executes exactly once, none lost
+    assert steps_seen == list(range(8))
+
+
+def test_preemption_replay_is_deterministic(tmp_path):
+    """Kill the job after step 5, start a NEW trainer process from the
+    checkpoint: losses on the replayed steps match an uninterrupted run
+    bit-for-bit (deterministic data + state restore)."""
+    cfg, tcfg, data = tiny_setup(tmp_path, steps=10)
+
+    def preempt(step):
+        if step == 6:
+            raise KeyboardInterrupt  # not caught by the trainer: hard kill
+
+    tr1 = Trainer(cfg, tcfg, data)
+    with pytest.raises(KeyboardInterrupt):
+        tr1.run(fail_hook=preempt)
+    tr1.ckpt.wait()
+
+    tr2 = Trainer(cfg, tcfg, data)  # fresh process, same ckpt dir
+    tr2.run()
+    l2 = {h["step"]: h["loss"] for h in tr2.history if "loss" in h}
+    assert min(l2) == 5  # resumed from step-4 checkpoint -> replay from 5
+
+    # uninterrupted reference
+    import shutil
+    shutil.rmtree(tmp_path)
+    tr3 = Trainer(cfg, tcfg, data)
+    tr3.run()
+    l3 = {h["step"]: h["loss"] for h in tr3.history if "loss" in h}
+    for s in l2:
+        assert l2[s] == pytest.approx(l3[s], rel=1e-5), s
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save under one sharding, restore under a different mesh shape --
+    the elastic-restart path after node loss."""
+    t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    ckptlib.save_checkpoint(str(tmp_path), 0, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    step, placed, _ = ckptlib.restore_with_shardings(
+        str(tmp_path), jax.eval_shape(lambda: t), sh)
+    assert step == 0
+    np.testing.assert_array_equal(np.asarray(placed["w"]), np.asarray(t["w"]))
+    assert placed["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# straggler policy
+# ---------------------------------------------------------------------------
+
+def test_straggler_suspect_and_recover():
+    pol = StragglerPolicy(4, suspect_after=10, evict_after=50, lag_steps=5)
+    for w in range(4):
+        pol.note_heartbeat(w, step=100, now=0.0)
+    # worker 2 goes silent
+    for w in (0, 1, 3):
+        pol.note_heartbeat(w, step=110, now=20.0)
+    ev = pol.poll(now=20.0)
+    assert [e.kind for e in ev] == ["suspect"] and ev[0].worker == 2
+    # it comes back -> healthy again
+    pol.note_heartbeat(2, step=111, now=21.0)
+    assert pol.workers[2].state is WorkerState.HEALTHY
+    assert pol.poll(now=22.0) == []
+
+
+def test_straggler_evict_and_elastic_restart():
+    pol = StragglerPolicy(4, suspect_after=10, evict_after=50, lag_steps=5)
+    for w in range(4):
+        pol.note_heartbeat(w, step=100, now=0.0)
+    for t in (20.0, 80.0):
+        for w in (0, 1, 3):
+            pol.note_heartbeat(w, step=100 + int(t), now=t)
+        events = pol.poll(now=t)
+    kinds = [e.kind for e in events]
+    assert "evict" in kinds and "elastic_restart" in kinds
+    restart = [e for e in events if e.kind == "elastic_restart"][0]
+    assert restart.detail["survivors"] == 3
+    assert pol.alive() == [0, 1, 3]
+
+
+def test_straggler_lag_detection():
+    pol = StragglerPolicy(3, suspect_after=1e9, evict_after=1e9, lag_steps=10)
+    pol.note_heartbeat(0, step=100, now=1.0)
+    pol.note_heartbeat(1, step=100, now=1.0)
+    pol.note_heartbeat(2, step=80, now=1.0)  # heartbeating but slow
+    ev = pol.poll(now=1.0)
+    assert [e.kind for e in ev] == ["suspect"] and ev[0].worker == 2
+
+
+def test_largest_mesh():
+    assert largest_mesh(128, 4) == (32, 16)   # full pod partition
+    d, m = largest_mesh(96, 4)
+    assert d * m <= 384
+    assert largest_mesh(1, 4) == (1, 4)

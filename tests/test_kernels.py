@@ -1,0 +1,200 @@
+"""Per-kernel validation: every Pallas kernel body (run in interpret mode)
+against its pure-jnp oracle, swept over shapes and dtypes, plus end-to-end
+integration into the clustered SOFT transforms."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched, quadrature, soft, wigner
+from repro.kernels import dwt as dwt_k
+from repro.kernels import folded_attention as fa
+from repro.kernels import ops, ref, wigner_rec
+
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.normal(size=shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# DWT kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,L,J,C2,tk,tl,tj", [
+    (4, 8, 16, 16, 2, 4, 8),
+    (8, 16, 32, 16, 8, 16, 32),   # single tile in l/j
+    (6, 32, 64, 8, 3, 8, 16),     # uneven tile counts
+    (2, 8, 16, 2, 1, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dwt_dense_sweep(K, L, J, C2, tk, tl, tj, dtype):
+    d = rand((K, L, J), dtype)
+    rhs = rand((K, J, C2), dtype)
+    out = dwt_k.dwt_dense(d, rhs, tk=tk, tl=tl, tj=tj)
+    expect = ref.dwt_ref(d, rhs)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("K,L,J,C2,tk,tl,tj", [
+    (4, 8, 16, 16, 2, 4, 8),
+    (6, 32, 64, 8, 3, 8, 16),
+])
+def test_idwt_dense_sweep(K, L, J, C2, tk, tl, tj):
+    d = rand((K, L, J))
+    lhs = rand((K, L, C2))
+    out = dwt_k.idwt_dense(d, lhs, tk=tk, tl=tl, tj=tj)
+    np.testing.assert_allclose(out, ref.idwt_ref(d, lhs), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_dwt_ragged_skips_and_matches():
+    """Ragged work-list schedule: correct on valid blocks AND provably
+    skips the l < m zero-triangle."""
+    B = 16
+    plan = batched.build_plan(B, dtype=jnp.float32, pad_to=8)
+    K, L, J = plan.d.shape
+    tk, tl = 8, 4
+    perm, l_start, kk, ll, n_dense = ops._ragged_metadata(plan, tk, tl)
+    assert len(kk) < n_dense  # the schedule actually skips blocks
+
+    rhs = rand((K, J, 16))
+    out = dwt_k.dwt_ragged(np.asarray(plan.d)[perm], rhs[perm], kk, ll,
+                           tk=tk, tl=tl, tj=J)
+    out = np.asarray(out)[np.argsort(perm)]
+    mask = np.arange(L)[None, :] >= l_start[:, None]
+    out = np.where(mask[:, :, None], out, 0.0)
+    expect = np.asarray(ref.dwt_ref(plan.d, rhs))
+    expect = np.where(mask[:, :, None], expect, 0.0)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# on-the-fly Wigner recurrence kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,tk", [(8, 4), (16, 8)])
+def test_wigner_onthefly_forward(B, tk):
+    plan = batched.build_plan(B, dtype=jnp.float64, pad_to=tk)
+    seeds, m, mp, cb = ops.onthefly_inputs(plan)
+    K, J = seeds.shape
+    rhs = rand((K, J, 16), np.float64)
+    out = wigner_rec.dwt_onthefly(seeds, m, mp, cb, rhs, B=B, tk=tk)
+    expect = ref.dwt_ref(plan.d, rhs)
+    np.testing.assert_allclose(out, expect, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("B,tk", [(8, 4)])
+def test_wigner_onthefly_inverse(B, tk):
+    plan = batched.build_plan(B, dtype=jnp.float64, pad_to=tk)
+    seeds, m, mp, cb = ops.onthefly_inputs(plan)
+    K, J = seeds.shape
+    lhs = rand((K, B, 16), np.float64)
+    out = wigner_rec.idwt_onthefly(seeds, m, mp, cb, lhs, B=B, tk=tk)
+    expect = ref.idwt_ref(plan.d, lhs)
+    np.testing.assert_allclose(out, expect, rtol=1e-10, atol=1e-10)
+
+
+def test_wigner_rec_ref_matches_table():
+    """The jnp recurrence oracle itself reproduces the host f64 table."""
+    B = 12
+    plan = batched.build_plan(B, dtype=jnp.float64)
+    seeds, m, mp, cb = ops.onthefly_inputs(plan)
+    tab = ref.wigner_rec_table_ref(seeds, m, mp, cb, B)
+    np.testing.assert_allclose(tab, plan.d, rtol=1e-11, atol=1e-12)
+
+
+def test_wigner_onthefly_f32_accuracy():
+    """f32 on-the-fly recurrence vs f64 table: documented precision ladder
+    step (DESIGN.md Sec. 8)."""
+    B = 32
+    plan64 = batched.build_plan(B, dtype=jnp.float64, pad_to=8)
+    plan32 = batched.build_plan(B, dtype=jnp.float32, pad_to=8)
+    seeds, m, mp, cb = ops.onthefly_inputs(plan32)
+    K, J = seeds.shape
+    rhs = rand((K, J, 16), np.float32, scale=0.1)
+    out32 = wigner_rec.dwt_onthefly(seeds, m, mp, cb, rhs, B=B, tk=8)
+    out64 = ref.dwt_ref(plan64.d, rhs.astype(np.float64))
+    err = np.abs(np.asarray(out32) - np.asarray(out64)).max()
+    assert err < 5e-4, err
+
+
+# ---------------------------------------------------------------------------
+# integration: kernels inside the full transform
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["dense", "ragged", "onthefly"])
+def test_forward_clustered_with_kernel(impl):
+    B = 8
+    plan = batched.build_plan(B, dtype=jnp.float64, pad_to=8)
+    fhat = soft.random_coeffs(B, 11)
+    f = batched.inverse_clustered(plan, fhat)
+    back_ref = np.asarray(batched.forward_clustered(plan, f))
+    dwt_fn = ops.make_dwt_fn(plan, impl, tk=4, tl=4, tj=16)
+    back_kernel = np.asarray(batched.forward_clustered(plan, f, dwt_fn=dwt_fn))
+    np.testing.assert_allclose(back_kernel, back_ref, rtol=1e-9, atol=1e-10)
+    np.testing.assert_allclose(back_kernel, fhat, rtol=1e-8, atol=1e-9)
+
+
+@pytest.mark.parametrize("impl", ["dense", "onthefly"])
+def test_inverse_clustered_with_kernel(impl):
+    B = 8
+    plan = batched.build_plan(B, dtype=jnp.float64, pad_to=8)
+    fhat = soft.random_coeffs(B, 12)
+    f_ref = np.asarray(batched.inverse_clustered(plan, fhat))
+    idwt_fn = ops.make_idwt_fn(plan, impl, tk=4, tl=4, tj=16)
+    f_kernel = np.asarray(batched.inverse_clustered(plan, fhat,
+                                                    idwt_fn=idwt_fn))
+    np.testing.assert_allclose(f_kernel, f_ref, rtol=1e-9, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# folded causal attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,bq", [(64, 16), (128, 32), (128, 64)])
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (4, 1)])
+def test_folded_attention_sweep(S, bq, Hq, Hkv):
+    B, D = 2, 32
+    q = rand((B, Hq, S, D)) * 0.5
+    k = rand((B, Hkv, S, D)) * 0.5
+    v = rand((B, Hkv, S, D))
+    out = ops.attention(q, k, v, bq=bq, bk=bq)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_folded_attention_dtypes(dtype):
+    B, H, S, D = 1, 2, 64, 64
+    q = jnp.asarray(rand((B, H, S, D)) * 0.3, dtype)
+    k = jnp.asarray(rand((B, H, S, D)) * 0.3, dtype)
+    v = jnp.asarray(rand((B, H, S, D)), dtype)
+    out = ops.attention(q, k, v, bq=16, bk=16)
+    assert out.dtype == dtype
+    expect = ref.attention_ref(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_folded_equals_naive_schedule():
+    """Both schedules produce identical outputs; folded uses ~half the
+    grid slots (the paper-P3 win)."""
+    B, H, S, D, bq = 1, 2, 128, 32, 16
+    q, k, v = (rand((B, H, S, D)) for _ in range(3))
+    out_f = ops.attention(q, k, v, bq=bq, bk=bq, schedule="folded")
+    out_n = ops.attention(q, k, v, bq=bq, bk=bq, schedule="naive")
+    np.testing.assert_allclose(out_f, out_n, rtol=1e-6, atol=1e-6)
+    slots_f = fa.grid_slots(S, bq, "folded")
+    slots_n = fa.grid_slots(S, bq, "naive")
+    assert slots_f < 0.6 * slots_n, (slots_f, slots_n)
+
+
+def test_folded_attention_rejects_odd_blocks():
+    q = rand((1, 1, 48, 16))
+    with pytest.raises(ValueError, match="even number of q-blocks"):
+        ops.attention(q, q, q, bq=16, bk=16)

@@ -1,0 +1,161 @@
+"""Launcher-layer tests: analytic FLOP counter, HLO collective parser,
+input specs (allocation-free), and a small-mesh dry-run in a subprocess."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.launch.flops import analytic_flops
+from repro.launch import hlo as hlolib
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs
+# ---------------------------------------------------------------------------
+
+def test_flops_matmul_matches_cost_analysis():
+    """Loop-free program: analytic == XLA cost analysis."""
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    fn = jax.jit(lambda x, y: x @ y)
+    got = analytic_flops(fn, a, b)
+    assert got == 2 * 64 * 128 * 32
+    ca = fn.lower(a, b).compile().cost_analysis()
+    assert got == int(ca["flops"])
+
+
+def test_flops_scan_multiplies():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    assert analytic_flops(f, a) == 7 * 2 * 16 * 16 * 16
+
+
+def test_flops_remat_counts_recompute():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def loss(x):
+        y = jax.checkpoint(lambda v: v @ v)(x)
+        return jnp.sum(y * y)
+
+    plain = analytic_flops(lambda x: jax.grad(
+        lambda v: jnp.sum((v @ v) ** 2))(x), a)
+    remat = analytic_flops(lambda x: jax.grad(loss)(x), a)
+    assert remat >= plain  # recompute included
+
+
+def test_flops_batched_dot():
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    got = analytic_flops(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+    assert got == 2 * 4 * 8 * 16 * 8
+
+
+def test_flops_fft():
+    a = jax.ShapeDtypeStruct((64,), jnp.complex64)
+    got = analytic_flops(jnp.fft.fft, a)
+    assert got == 5 * 64 * 6
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (on synthetic text)
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ar = f32[8,8]{1,0} all-reduce(%x), channel_id=1, to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[16,4]) -> f32[16,4] {
+  %ag = f32[16,16]{1,0} all-gather(%a), dimensions={1}
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[16,4]{1,0} reduce-scatter(%ag2), dimensions={1}
+}
+"""
+
+
+def test_hlo_parser_while_multiplier():
+    got = hlolib.collective_bytes(HLO_SAMPLE)
+    assert got["by_op"]["all-gather"] == 16 * 16 * 4
+    assert got["by_op"]["all-reduce"] == 5 * 8 * 8 * 4  # x5 trip count
+    assert got["by_op"]["reduce-scatter"] == 16 * 4 * 4
+    assert got["count"] == 1 + 5 + 1
+
+
+def test_hlo_parser_async_counted_once():
+    text = """
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %s = f32[32]{0} all-gather-start(%a), dimensions={0}
+  %d = f32[32]{0} all-gather-done(%s)
+}
+"""
+    got = hlolib.collective_bytes(text)
+    assert got["by_op"]["all-gather"] == 32 * 4
+    assert got["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# specs are allocation-free
+# ---------------------------------------------------------------------------
+
+def test_specs_no_allocation():
+    from repro import configs
+    from repro.launch import specs as speclib
+    from repro.models.sharding import ShardCtx
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ShardCtx(mesh=mesh, dp_axes=("data",))
+    cfg = configs.get("nemotron-4-340b")  # 340B: would OOM if allocated
+    p_shape, p_sh = speclib.params_specs(cfg, ctx)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p_shape))
+    assert n > 300e9
+    (b, st, pos), _ = speclib.decode_specs(cfg, 128, 32768, ctx)
+    leaves = jax.tree.leaves(st)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_soft_plan_specs_match_real_plan():
+    """The SDS stand-in has exactly the real plan's shapes/dtypes."""
+    from repro.core import batched
+    from repro.launch import specs as speclib
+
+    B, n = 8, 4
+    real = batched.build_plan(B, dtype=jnp.float32, pad_to=n)
+    spec = speclib.soft_plan_specs(B, n)
+    for name in batched._PLAN_LEAVES:
+        r, s = getattr(real, name), getattr(spec, name)
+        assert r.shape == s.shape, name
+        assert r.dtype == s.dtype, name
+
+
+def test_dryrun_cell_subprocess():
+    """End-to-end dry-run of one cell on a faked 512-device mesh."""
+    import pathlib
+    import subprocess
+    import sys
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "decode_32k", "--mesh", "multi", "--out",
+         "/tmp/dryrun_pytest"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd="/tmp")
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "all cells OK" in out.stdout
