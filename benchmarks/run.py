@@ -7,6 +7,7 @@ Sections:
   workbalance      paper Figs 2-4 analog (schedule speedup bounds)
   soft_runtime     measured 1-core runtime (sequential vs clustered)
   kernel_schedule  folded-attention / ragged-DWT grid savings
+  dwt_schedules    dense/ragged/onthefly/fused DWT kernels + V batching
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts
 """
@@ -70,7 +71,7 @@ def lm_step(fast=False):
 
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
-            "lm_step", "roofline")
+            "dwt_schedules", "lm_step", "roofline")
 
 
 def main() -> None:
@@ -100,6 +101,9 @@ def main() -> None:
         elif name == "kernel_schedule":
             from benchmarks import kernel_schedule
             kernel_schedule.main(fast=args.fast)
+        elif name == "dwt_schedules":
+            from benchmarks import dwt_schedules
+            dwt_schedules.main(fast=args.fast)
         elif name == "lm_step":
             lm_step(fast=args.fast)
         elif name == "roofline":

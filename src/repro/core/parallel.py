@@ -24,19 +24,22 @@ The Wigner table d[k, l, j] is sharded over clusters, so the B = 512 table
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from .compat import shard_map, shard_map_norep
 
 from .batched import SoftPlan, fft_analysis, fft_synthesis
 
 __all__ = [
     "check_mesh_compat", "distributed_forward", "distributed_inverse",
-    "packed_to_dense", "dense_to_packed",
+    "LocalDWT", "make_bucketed_local_dwt", "make_fused_local_dwt",
+    "make_fused_local_idwt", "packed_to_dense", "dense_to_packed",
 ]
 
 
@@ -57,13 +60,48 @@ def _refl_sign(plan_reflected, parity):
 
 
 # ---------------------------------------------------------------------------
-# forward
+# pluggable device-local DWT contraction
 # ---------------------------------------------------------------------------
 
-def _plain_local_dwt(d, rhs2):
-    """(Kloc, L, J) x (Kloc, J, C2) -> (Kloc, L, C2)."""
-    return jnp.einsum("klj,kjc->klc", d, rhs2,
-                      preferred_element_type=d.dtype)
+@dataclasses.dataclass(frozen=True)
+class LocalDWT:
+    """Device-local DWT/iDWT contraction plugged into the shard_map paths.
+
+    operands: global arrays handed to the shard_map body before the
+    rhs/lhs; cluster_sharded: per-operand flag (True -> sharded over the
+    leading cluster axis, False -> replicated); fn(*local_operands, x2)
+    runs on each device's shard.  Forward contract: (Kloc, J, C2) rhs ->
+    (Kloc, L, C2); inverse: (Kloc, L, C2) lhs -> (Kloc, J, C2).
+
+    The fused variants (make_fused_local_dwt/_idwt) carry recurrence seeds
+    instead of plan.d, so NO Wigner-table shard enters the shard_map at all
+    -- the per-device d-footprint (~1.6 GB at B = 512 on 256 devices)
+    drops to the K*J seed rows.
+    """
+
+    operands: tuple
+    cluster_sharded: tuple
+    fn: object
+    # pallas_call bodies have no replication rule on older jax; only those
+    # need the shard_map replication check disabled
+    needs_norep: bool = False
+
+    def specs(self, ax0):
+        return tuple(ax0 if s else P() for s in self.cluster_sharded)
+
+    def shard_map(self):
+        return shard_map_norep if self.needs_norep else shard_map
+
+
+def _normalize_local_dwt(plan, local_dwt, einsum_spec):
+    if isinstance(local_dwt, LocalDWT):
+        return local_dwt
+    if local_dwt is None:
+        def local_dwt(d, x2):  # noqa: F811 -- plain dense contraction
+            return jnp.einsum(einsum_spec, d, x2,
+                              preferred_element_type=d.dtype)
+    # legacy contract: bare fn(d_shard, x2)
+    return LocalDWT((plan.d,), (True,), local_dwt)
 
 
 def make_bucketed_local_dwt(slices, B):
@@ -82,18 +120,77 @@ def make_bucketed_local_dwt(slices, B):
     return fn
 
 
+def _fused_local_inputs(plan: SoftPlan, n_shards: int, tk: int):
+    """Seeds/orders plus per-local-tile l0s valid for EVERY shard (min over
+    shards at each local offset, cf. bucket_boundaries_from_lstart)."""
+    from repro.kernels import ops as kops  # deferred: kernels import core
+
+    from .batched import plan_lstart
+
+    kloc = plan.n_padded // n_shards
+    if tk is None:  # largest cluster-tile <= 8 dividing the local count
+        tk = max(t for t in range(1, min(8, kloc) + 1) if kloc % t == 0)
+    if kloc % tk:
+        raise ValueError(f"local cluster count {kloc} not divisible by "
+                         f"tk={tk}")
+    seeds, m, mp, cb = kops.onthefly_inputs(plan)
+    per_shard = plan_lstart(plan).reshape(n_shards, kloc)
+    l0s = per_shard.reshape(n_shards, kloc // tk, tk).min(axis=(0, 2))
+    return seeds, m, mp, cb, np.asarray(l0s, np.int32), tk
+
+
+def make_fused_local_dwt(plan: SoftPlan, n_shards: int, *, tk=None,
+                         interpret=None):
+    """LocalDWT running the fused ragged+on-the-fly kernel per device: no
+    d-table shard, zero-triangle skipped via the replicated l0s schedule.
+    Build the plan with order=shard_balanced_order(...) so every shard's
+    local block is extent-sorted (correct for any order; sorted orders
+    maximize the skipped rows)."""
+    from repro.kernels import dwt_fused as dfk
+
+    seeds, m, mp, cb, l0s, tk = _fused_local_inputs(plan, n_shards, tk)
+
+    def fn(seeds_loc, m_loc, mp_loc, cb_rep, rhs2):
+        return dfk.dwt_fused(seeds_loc, m_loc, mp_loc, cb_rep, rhs2, l0s,
+                             B=plan.B, tk=tk, interpret=interpret)
+
+    return LocalDWT((seeds, m, mp, cb), (True, True, True, False), fn,
+                    needs_norep=True)
+
+
+def make_fused_local_idwt(plan: SoftPlan, n_shards: int, *, tk=None,
+                          interpret=None):
+    """Inverse-path twin of make_fused_local_dwt (no d-table shard)."""
+    from repro.kernels import dwt_fused as dfk
+
+    seeds, m, mp, cb, l0s, tk = _fused_local_inputs(plan, n_shards, tk)
+
+    def fn(seeds_loc, m_loc, mp_loc, cb_rep, lhs2):
+        return dfk.idwt_fused(seeds_loc, m_loc, mp_loc, cb_rep, lhs2, l0s,
+                              B=plan.B, tk=tk, interpret=interpret)
+
+    return LocalDWT((seeds, m, mp, cb), (True, True, True, False), fn,
+                    needs_norep=True)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
 def distributed_forward(plan: SoftPlan, f, mesh, axis=("data", "model"),
                         local_dwt=None):
     """FSOFT on a mesh: f (2B, 2B, 2B) beta-sharded -> packed coefficients
     (K, B, 8) cluster-sharded.  `axis` may be one mesh axis name or a tuple
     (the shard axes are flattened).  `local_dwt` swaps the device-local
-    contraction (e.g. make_bucketed_local_dwt)."""
+    contraction: a bare fn(d_shard, rhs2) (e.g. make_bucketed_local_dwt)
+    or a LocalDWT (e.g. make_fused_local_dwt, which drops the d-table
+    shard entirely)."""
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
     n = int(np.prod([mesh.shape[a] for a in axis]))
     check_mesh_compat(plan, n)
-    local_dwt = local_dwt or _plain_local_dwt
+    ld = _normalize_local_dwt(plan, local_dwt, "klj,kjc->klc")
 
-    def body(d, refl, sign, gm, gmp, w, scale, parity, f_loc):
+    def body(refl, sign, gm, gmp, w, scale, parity, f_loc, *dwt_ops):
         S = fft_analysis(f_loc)                       # (2B, jloc, 2B)
         Sm = S[gm, :, gmp]                            # (K, C, jloc)
         rhs = Sm * (sign[..., None] * w[None, None, :])
@@ -104,43 +201,46 @@ def distributed_forward(plan: SoftPlan, f, mesh, axis=("data", "model"),
                                  split_axis=0, concat_axis=1, tiled=True)
         rhs = rhs.reshape(K // n, jloc * n, C, 2)     # (Kloc, J, C, 2)
         rhs = jnp.where(refl[:, None, :, None], rhs[:, ::-1], rhs)
-        out = local_dwt(d, rhs.reshape(*rhs.shape[:2], 2 * C))
+        out = ld.fn(*dwt_ops, rhs.reshape(*rhs.shape[:2], 2 * C))
         out = out.reshape(*out.shape[:2], C, 2)
         outc = out[..., 0] + 1j * out[..., 1]
         return outc * (_refl_sign(refl, parity) * scale[None, :, None])
 
     ax0 = P(axis if len(axis) > 1 else axis[0])
-    sharded = shard_map(
+    sharded = ld.shard_map()(
         body, mesh=mesh,
-        in_specs=(ax0, ax0, P(), P(), P(), ax0, P(), P(),
-                  P(None, ax0[0], None)),
+        in_specs=(ax0, P(), P(), P(), ax0, P(), P(),
+                  P(None, ax0[0], None)) + ld.specs(ax0),
         out_specs=ax0,
     )
-    return sharded(plan.d, plan.reflected, plan.sign, plan.gather_m,
-                   plan.gather_mp, plan.w, plan.scale, plan.parity, f)
+    return sharded(plan.reflected, plan.sign, plan.gather_m,
+                   plan.gather_mp, plan.w, plan.scale, plan.parity, f,
+                   *ld.operands)
 
 
 # ---------------------------------------------------------------------------
 # inverse
 # ---------------------------------------------------------------------------
 
-def distributed_inverse(plan: SoftPlan, packed, mesh, axis=("data", "model")):
+def distributed_inverse(plan: SoftPlan, packed, mesh, axis=("data", "model"),
+                        local_idwt=None):
     """iFSOFT on a mesh: packed coefficients (K, B, 8) cluster-sharded ->
-    samples (2B, 2B, 2B) beta-sharded."""
+    samples (2B, 2B, 2B) beta-sharded.  `local_idwt` swaps the device-local
+    contraction: a bare fn(d_shard, lhs2) or a LocalDWT (e.g.
+    make_fused_local_idwt, which drops the d-table shard entirely)."""
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
     n = int(np.prod([mesh.shape[a] for a in axis]))
     check_mesh_compat(plan, n)
     B = plan.B
+    ld = _normalize_local_dwt(plan, local_idwt, "klj,klc->kjc")
 
-    def body(d, refl, sign_sh, sign, gm, gmp, parity, packed_loc):
+    def body(refl, sign_sh, sign, gm, gmp, parity, packed_loc, *idwt_ops):
         # sign_sh: cluster-sharded (scales the local lhs);
         # sign:    replicated (masks the global bin scatter after all-to-all)
         lhs = packed_loc * (_refl_sign(refl, parity) * sign_sh[:, None, :])
         lhs = jnp.stack([lhs.real, lhs.imag], -1)     # (Kloc, L, C, 2)
         C = lhs.shape[2]
-        g = jnp.einsum("klj,klc->kjc", d,
-                       lhs.reshape(*lhs.shape[:2], 2 * C),
-                       preferred_element_type=d.dtype)
+        g = ld.fn(*idwt_ops, lhs.reshape(*lhs.shape[:2], 2 * C))
         g = g.reshape(g.shape[0], g.shape[1], C, 2)   # (Kloc, J, C, 2)
         g = jnp.where(refl[:, None, :, None], g[:, ::-1], g)
         g = jax.lax.all_to_all(g.reshape(*g.shape[:2], 2 * C), axis,
@@ -157,13 +257,14 @@ def distributed_inverse(plan: SoftPlan, packed, mesh, axis=("data", "model")):
         return fft_synthesis(buf[: 2 * B, :, : 2 * B])
 
     ax0 = P(axis if len(axis) > 1 else axis[0])
-    sharded = shard_map(
+    sharded = ld.shard_map()(
         body, mesh=mesh,
-        in_specs=(ax0, ax0, ax0, P(), P(), P(), P(), ax0),
+        in_specs=(ax0, ax0, P(), P(), P(), P(), ax0) + ld.specs(ax0),
         out_specs=P(None, ax0[0], None),
     )
-    return sharded(plan.d, plan.reflected, plan.sign, plan.sign,
-                   plan.gather_m, plan.gather_mp, plan.parity, packed)
+    return sharded(plan.reflected, plan.sign, plan.sign,
+                   plan.gather_m, plan.gather_mp, plan.parity, packed,
+                   *ld.operands)
 
 
 # ---------------------------------------------------------------------------

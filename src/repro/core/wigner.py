@@ -119,10 +119,12 @@ def wigner_d_table(B: int, beta: np.ndarray | None = None) -> np.ndarray:
     from . import quadrature
 
     if beta is None:
+        fund, _ = wigner_d_fundamental(B)    # default grid: memoized
         beta = quadrature.betas(B)
+    else:
+        fund, _ = wigner_d_fundamental(B, beta)
     J = len(beta)
     d = np.zeros((B, 2 * B - 1, 2 * B - 1, J))
-    fund, _ = wigner_d_fundamental(B, beta)  # (P, B, J)
     pairs = fundamental_pairs(B)
     parity = (-1.0) ** np.arange(B)  # (-1)^l
     for p, (m, mp) in enumerate(pairs):
@@ -159,6 +161,9 @@ def fundamental_pairs(B: int) -> np.ndarray:
     return np.asarray(out, dtype=np.int32)
 
 
+_FUND_CACHE: dict = {}
+
+
 def wigner_d_fundamental(B: int, beta: np.ndarray | None = None,
                          dtype=np.float64) -> tuple[np.ndarray, np.ndarray]:
     """Packed table d[P, B, J] on the fundamental domain 0 <= m' <= m < B.
@@ -168,10 +173,19 @@ def wigner_d_fundamental(B: int, beta: np.ndarray | None = None,
     recurrence for all P pairs simultaneously (vectorized over (P, J)),
     which is exactly the computation the on-the-fly Pallas kernel fuses
     into the DWT (kernels/wigner_rec.py).
+
+    Calls on the default quadrature grid (beta=None) are memoized by
+    (B, dtype); the cached arrays are marked read-only -- copy before
+    mutating.
     """
     from . import quadrature
 
+    key = None
     if beta is None:
+        key = (B, np.dtype(dtype).str)
+        hit = _FUND_CACHE.get(key)
+        if hit is not None:
+            return hit
         beta = quadrature.betas(B)
     beta = np.asarray(beta, dtype=np.float64)
     J = len(beta)
@@ -203,4 +217,9 @@ def wigner_d_fundamental(B: int, beta: np.ndarray | None = None,
         d_next = A[:, None] * (cb - mu[:, None]) * d_cur - C[:, None] * d_prev
         d_prev = np.where(active[:, None], d_cur, 0.0)
         d_cur = np.where(active[:, None], d_next, 0.0)
-    return table.astype(dtype), pairs
+    table = table.astype(dtype)
+    if key is not None:
+        table.flags.writeable = False
+        pairs.flags.writeable = False
+        _FUND_CACHE[key] = (table, pairs)
+    return table, pairs

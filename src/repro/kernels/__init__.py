@@ -1,9 +1,48 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-  dwt.py               clustered DWT/iDWT (dense + ragged-fold schedules)
+  dwt.py               clustered DWT/iDWT (dense + ragged work-list grids)
   wigner_rec.py        DWT fused with the on-the-fly Wigner-d recurrence
+  dwt_fused.py         BOTH levers at once: ragged l-range (zero-triangle
+                       skipped via scalar-prefetch l0s) + on-the-fly rows
+                       (no d-table in HBM) + V-wide transform batching
   folded_attention.py  causal flash attention on the paper's folded grid
+  autotune.py          measured (tk, tl, tj, V) sweep, on-disk cache
   ops.py               jit'd wrappers (auto interpret-mode on CPU)
+  runtime.py           default_interpret() shared by every wrapper
   ref.py               pure-jnp oracles
+
+Schedule selection (make_dwt_fn impl=...)
+-----------------------------------------
+
+  dense     Simplest; pads every cluster to the full l-range and streams
+            the whole d-table from HBM.  Only competitive at tiny B or
+            when the table is already resident and B <= ~64.
+  ragged    Paper P3: skips the l < max(|m|,|m'|) zero-triangle blocks
+            (~2.4x fewer MXU blocks at B = 512) but still reads the
+            visited d-blocks from HBM.  Best when VMEM is too tight for
+            the recurrence state or d is cheap to keep (small B, many
+            reuses per table build).
+  onthefly  No d-table anywhere (seeds + three-term recurrence in VMEM);
+            HBM traffic drops by ~L/2 vs dense.  Executes the full l-range
+            per cluster, so it pays the zero-triangle in compute.  Best
+            at large B when clusters are unsorted.
+  fused     onthefly + the ragged skip: host-sorted clusters, per-tile
+            scalar-prefetch l0, recurrence starts at l0.  Strictly fewer
+            row-steps than onthefly AND no d-table term -- the default
+            choice for B >= 32.  batch=V packs V transforms onto the lane
+            axis (C2 = V*C*2): one launch, each generated d-row reused V
+            times (core.batched.forward_clustered_batch).
+
+VMEM budgets (f32, TK = 8): dense/ragged hold a (TK, TL, TJ) d-block
+(2 MB at 8x128x512) + rhs + out; the recurrence schedules hold seeds +
+2 state rows (3*TK*J) + rhs (TK*J*C2) + out (TK*L*C2) -- ~1 MB at B = 512
+V = 1, leaving lane-batching headroom to V ~ 16 under the ~16 MB ceiling.
+
+Tile choice is measured, not guessed: kernels/autotune.py sweeps the
+divisor-constrained candidates per (B, dtype, backend, impl, V) and
+memoizes winners in $REPRO_AUTOTUNE_CACHE (default
+~/.cache/repro/autotune.json); benchmarks/dwt_schedules.py prints the
+block/HBM accounting behind the guidance above.
 """
-from . import dwt, folded_attention, ops, ref, wigner_rec  # noqa: F401
+from . import (autotune, dwt, dwt_fused, folded_attention, ops, ref,  # noqa: F401
+               runtime, wigner_rec)

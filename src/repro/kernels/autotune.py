@@ -1,0 +1,153 @@
+"""Measured tile autotuner for the clustered-DWT kernel schedules.
+
+OpenFFT's lesson (arXiv:1501.07350): an exhaustive-but-cheap measured sweep
+over decompositions is what turns a parallel transform design into actual
+speedup.  This module times real kernel launches for a small candidate set
+of (tk, tl, tj, V) tilings and memoizes the winner on disk keyed by
+(B, dtype, backend, impl, V) -- one sweep per machine/shape, then every
+subsequent make_dwt_fn call reads the cache.
+
+    from repro.kernels import autotune
+    cfg = autotune.autotune_dwt(plan, impl="fused")      # {'tk': ..., ...}
+    dwt_fn = autotune.tuned_dwt_fn(plan, impl="fused")   # ready to use
+
+Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+Delete the file (or pass refresh=True) to re-measure after a toolchain or
+hardware change.  Candidate tiles respect the kernel divisibility
+constraints (tk | K, tl | L, tj | J); V candidates pack V transforms onto
+the lane axis and are scored by *per-transform* time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import ops
+
+__all__ = ["autotune_dwt", "tuned_dwt_fn", "tuned_idwt_fn", "cache_path",
+           "candidate_tiles"]
+
+_DEF_CACHE = "~/.cache/repro/autotune.json"
+
+
+def cache_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get("REPRO_AUTOTUNE_CACHE",
+                                       _DEF_CACHE)).expanduser()
+
+
+def _load_cache(path: pathlib.Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_cache(path: pathlib.Path, entries: dict) -> None:
+    """Merge `entries` into the on-disk cache atomically.
+
+    Re-reads before writing and uses a unique temp name so concurrent
+    autotune runs (multi-host jobs, parallel benchmarks) don't clobber
+    each other's freshly measured keys."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    merged = {**_load_cache(path), **entries}
+    tmp = path.with_name(f".{path.name}.{os.getpid()}.tmp")
+    tmp.write_text(json.dumps(merged, indent=1, sort_keys=True))
+    tmp.replace(path)
+
+
+def _divisors_leq(n: int, cands, fallback: int = 1) -> list[int]:
+    out = [c for c in cands if c <= n and n % c == 0]
+    return out or [fallback]
+
+
+def candidate_tiles(K: int, L: int, J: int, impl: str) -> list[dict]:
+    """Small exhaustive candidate set per schedule family.
+
+    Recurrence schedules (onthefly/fused) only tile the cluster axis; the
+    grid schedules (dense/ragged) tile all three.
+    """
+    tks = _divisors_leq(K, (4, 8, 16, 32))
+    if impl in ("onthefly", "fused"):
+        return [{"tk": tk, "tl": L, "tj": J} for tk in tks]
+    tls = _divisors_leq(L, (8, 16, 32, 64, 128), fallback=L)
+    tjs = _divisors_leq(J, (32, 64, 128, 256, 512), fallback=J)
+    return [{"tk": tk, "tl": tl, "tj": tj}
+            for tk in tks for tl in tls for tj in tjs]
+
+
+def _time_fn(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def _key(plan, impl: str, V: int) -> str:
+    return (f"{impl}/B{plan.B}/K{plan.n_padded}/{jnp.dtype(plan.d.dtype).name}"
+            f"/{jax.default_backend()}/V{V}")
+
+
+def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
+                 refresh: bool = False, cache: str | os.PathLike | None = None,
+                 interpret=None) -> dict:
+    """Measure-and-cache the best (tk, tl, tj, V) for one schedule.
+
+    Returns {"tk", "tl", "tj", "V", "per_transform_s"}.  Sweeps the
+    candidate tilings for every V in Vs (V > 1 packs V transforms onto the
+    kernel lane axis; scored per transform so wider packing must EARN its
+    place by amortizing launch + Wigner-generation cost).
+    """
+    path = pathlib.Path(cache) if cache is not None else cache_path()
+    store = _load_cache(path)
+    key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0])
+    if not refresh and key in store:
+        return store[key]
+
+    K, L, J = plan.d.shape
+    C = plan.gather_m.shape[1]
+    rng = np.random.default_rng(0)
+    best = None
+    for V in Vs:
+        shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
+        rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
+        for tile in candidate_tiles(K, L, J, impl):
+            fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
+                                 batch=None if V == 1 else V, **tile)
+            try:
+                t = _time_fn(lambda r: fn(plan, r), rhs, reps=reps) / V
+            except Exception:   # tiling rejected by the kernel -> skip
+                continue
+            if best is None or t < best["per_transform_s"]:
+                best = dict(tile, V=V, per_transform_s=t)
+    if best is None:
+        raise RuntimeError(f"no viable tiling for {key}")
+    _store_cache(path, {key: best})
+    return best
+
+
+def tuned_dwt_fn(plan, impl: str = "fused", *, Vs=(1,), interpret=None,
+                 **tune_kw):
+    """make_dwt_fn with autotuned tiles (sweeps + caches on first call)."""
+    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret, **tune_kw)
+    V = cfg["V"]
+    return ops.make_dwt_fn(plan, impl, tk=cfg["tk"], tl=cfg["tl"],
+                           tj=cfg["tj"], batch=None if V == 1 else V,
+                           interpret=interpret)
+
+
+def tuned_idwt_fn(plan, impl: str = "fused", *, Vs=(1,), interpret=None,
+                  **tune_kw):
+    """make_idwt_fn sharing the forward sweep's tiling (same data layout)."""
+    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret, **tune_kw)
+    V = cfg["V"]
+    return ops.make_idwt_fn(plan, impl, tk=cfg["tk"], tl=cfg["tl"],
+                            tj=cfg["tj"], batch=None if V == 1 else V,
+                            interpret=interpret)

@@ -22,7 +22,12 @@ VMEM budget (f32, defaults TK=8, TL=128, TJ=512): d-block 2 MB + rhs 0.5 MB
 + out 64 KB -- fits the ~16 MB v5e VMEM with double buffering.  The MXU
 tiles are (TL x TJ) @ (TJ x C2); C2 = 16 for a single transform (the DWT is
 memory-bound on the d-table, so lane under-utilization is hidden; batching V
-transforms widens C2 to V*16 -- see ops.batched_rhs).
+transforms widens C2 to V*16 -- see ops.batched_rhs and
+ops.make_dwt_fn(batch=V)).
+
+kernels/dwt_fused.py combines the ragged skip with the on-the-fly Wigner
+recurrence (no d-table in HBM at all) -- prefer it for B >= 32; the grids
+here remain the right choice when the table is resident and cheap.
 """
 from __future__ import annotations
 
@@ -33,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .runtime import resolve_interpret
 
 __all__ = ["dwt_dense", "idwt_dense", "dwt_ragged", "build_work_list"]
 
@@ -57,8 +64,9 @@ def _dwt_kernel(d_ref, r_ref, o_ref):
 
 
 @partial(jax.jit, static_argnames=("tk", "tl", "tj", "interpret"))
-def dwt_dense(d, rhs, *, tk=8, tl=128, tj=512, interpret=True):
+def dwt_dense(d, rhs, *, tk=8, tl=128, tj=512, interpret=None):
     """Forward clustered DWT, dense grid.  d: (K, L, J); rhs: (K, J, C2)."""
+    interpret = resolve_interpret(interpret)
     K, L, J = d.shape
     C2 = rhs.shape[-1]
     tk, tl, tj = min(tk, K), min(tl, L), min(tj, J)
@@ -91,8 +99,9 @@ def _idwt_kernel(d_ref, l_ref, o_ref):
 
 
 @partial(jax.jit, static_argnames=("tk", "tl", "tj", "interpret"))
-def idwt_dense(d, lhs, *, tk=8, tl=128, tj=512, interpret=True):
+def idwt_dense(d, lhs, *, tk=8, tl=128, tj=512, interpret=None):
     """Inverse clustered DWT (iDWT), dense grid.  lhs: (K, L, C2)."""
+    interpret = resolve_interpret(interpret)
     K, L, J = d.shape
     C2 = lhs.shape[-1]
     tk, tl, tj = min(tk, K), min(tl, L), min(tj, J)
@@ -152,12 +161,13 @@ def _dwt_ragged_kernel(kk_ref, ll_ref, d_ref, r_ref, o_ref):
 
 
 @partial(jax.jit, static_argnames=("tk", "tl", "tj", "interpret"))
-def dwt_ragged(d, rhs, kk, ll, *, tk=8, tl=128, tj=512, interpret=True):
+def dwt_ragged(d, rhs, kk, ll, *, tk=8, tl=128, tj=512, interpret=None):
     """Forward clustered DWT visiting only the work-list blocks.
 
     Blocks never enumerated keep whatever was in the output buffer; callers
     must mask with the l >= l_start validity mask (ops.dwt applies it).
     """
+    interpret = resolve_interpret(interpret)
     K, L, J = d.shape
     C2 = rhs.shape[-1]
     tk, tl, tj = min(tk, K), min(tl, L), min(tj, J)

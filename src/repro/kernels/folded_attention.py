@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .runtime import resolve_interpret
+
 __all__ = ["folded_causal_attention", "grid_slots"]
 
 NEG_INF = float("-inf")
@@ -112,12 +114,13 @@ def _naive_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 @partial(jax.jit,
          static_argnames=("bq", "bk", "scale", "schedule", "interpret"))
 def folded_causal_attention(q, k, v, *, bq=128, bk=128, scale=None,
-                            schedule="folded", interpret=True):
+                            schedule="folded", interpret=None):
     """Causal flash attention.  q: (B, Hq, S, D); k, v: (B, Hkv, S, D).
 
     schedule: "folded" (paper-P3 grid) or "naive" (masked square grid).
     Both produce identical values; they differ only in executed grid slots.
     """
+    interpret = resolve_interpret(interpret)
     B, Hq, S, D = q.shape
     Hkv = k.shape[1]
     if Hq % Hkv:

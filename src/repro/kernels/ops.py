@@ -24,16 +24,13 @@ from repro.core import quadrature, wigner
 from repro.core.batched import SoftPlan
 
 from . import dwt as dwt_kernels
+from . import dwt_fused
 from . import folded_attention as fa
 from . import wigner_rec
+from .runtime import default_interpret
 
 __all__ = ["default_interpret", "make_dwt_fn", "make_idwt_fn",
-           "onthefly_inputs", "attention"]
-
-
-def default_interpret() -> bool:
-    """Pallas interpret mode unless running on real TPU hardware."""
-    return jax.default_backend() != "tpu"
+           "onthefly_inputs", "fused_metadata", "batched_rhs", "attention"]
 
 
 def _split_ri(x):
@@ -43,6 +40,19 @@ def _split_ri(x):
 
 def _unsplit_ri(x, c):
     return x.reshape(*x.shape[:2], c, 2)
+
+
+def pack_lanes(x):
+    """(V, K, A, C, 2) -> (K, A, V*C*2): V batched transforms side by side
+    on the contraction lane axis, one kernel launch for the whole batch."""
+    V, K, A, C, _ = x.shape
+    return jnp.moveaxis(x, 0, 2).reshape(K, A, V * C * 2)
+
+
+def unpack_lanes(x, V, C):
+    """(K, A, V*C*2) -> (V, K, A, C, 2), inverse of pack_lanes."""
+    K, A, _ = x.shape
+    return jnp.moveaxis(x.reshape(K, A, V, C, 2), 2, 0)
 
 
 def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):
@@ -59,16 +69,57 @@ def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):
     return perm, l_start, kk, ll, n_dense
 
 
+def fused_metadata(plan: SoftPlan, tk: int):
+    """Host-side ragged metadata for the fused kernel: sort clusters by
+    ascending l-start (padded rows last, at B-1 -- their Wigner rows are
+    identically zero) and reduce each TK-tile to its scalar-prefetch l0."""
+    from repro.core.batched import plan_lstart
+
+    l_start = plan_lstart(plan)
+    perm = np.argsort(l_start, kind="stable").astype(np.int32)
+    l0s = dwt_fused.build_tile_lstarts(l_start[perm], tk)
+    return perm, l_start, l0s
+
+
+def _wrap_batch(raw, batch):
+    """Lift raw(p, rhs2: (K, A, C2)) to the (plan, rhs) dwt_fn contract.
+
+    batch=None: rhs (K, A, C, 2) (the single-transform contract).
+    batch=V (any int >= 1): rhs (V, K, A, C, 2); the V transforms are
+    packed onto the lane axis so the kernel launches once.
+    """
+    if batch is None:
+        def fn(p: SoftPlan, rhs):
+            if rhs.ndim != 4:
+                raise ValueError(f"dwt_fn built without batch expects "
+                                 f"(K, A, C, 2), got {rhs.shape}; pass "
+                                 f"batch=V to make_dwt_fn for a V-stack")
+            return _unsplit_ri(raw(p, _split_ri(rhs)), rhs.shape[2])
+        return fn
+
+    def fn(p: SoftPlan, rhs):
+        if rhs.ndim != 5 or rhs.shape[0] != batch:
+            raise ValueError(f"dwt_fn built with batch={batch}, expected "
+                             f"(V, K, A, C, 2), got {rhs.shape}")
+        return unpack_lanes(raw(p, pack_lanes(rhs)), batch, rhs.shape[3])
+    return fn
+
+
 def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
-                interpret=None):
-    """Build a dwt_fn(plan, rhs) for core.batched.forward_clustered."""
+                interpret=None, batch=None):
+    """Build a dwt_fn(plan, rhs) for core.batched.forward_clustered.
+
+    impl: "dense" | "ragged" | "onthefly" | "fused".  batch=V makes the fn
+    accept a (V, K, J, C, 2) stack of RHS (core.batched.
+    forward_clustered_batch) contracted in ONE kernel launch with V*C*2
+    lanes.
+    """
     interpret = default_interpret() if interpret is None else interpret
     if impl == "dense":
-        def fn(p: SoftPlan, rhs):
-            out = dwt_kernels.dwt_dense(p.d, _split_ri(rhs), tk=tk, tl=tl,
-                                        tj=tj, interpret=interpret)
-            return _unsplit_ri(out, rhs.shape[2])
-        return fn
+        def raw(p: SoftPlan, rhs2):
+            return dwt_kernels.dwt_dense(p.d, rhs2, tk=tk, tl=tl, tj=tj,
+                                         interpret=interpret)
+        return _wrap_batch(raw, batch)
 
     if impl == "ragged":
         perm, l_start, kk, ll, _ = _ragged_metadata(plan, tk, tl)
@@ -76,48 +127,86 @@ def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
         l_grid = np.arange(plan.d.shape[1])
         mask = jnp.asarray((l_grid[None, :] >= l_start[:, None]))  # (K, L)
 
-        def fn(p: SoftPlan, rhs):
-            out = dwt_kernels.dwt_ragged(p.d[perm], _split_ri(rhs)[perm],
-                                         kk, ll, tk=tk, tl=tl, tj=tj,
+        def raw(p: SoftPlan, rhs2):
+            out = dwt_kernels.dwt_ragged(p.d[perm], rhs2[perm], kk, ll,
+                                         tk=tk, tl=tl, tj=tj,
                                          interpret=interpret)
             out = out[inv_perm]
-            out = jnp.where(mask[:, :, None], out, 0.0)
-            return _unsplit_ri(out, rhs.shape[2])
-        return fn
+            return jnp.where(mask[:, :, None], out, 0.0)
+        return _wrap_batch(raw, batch)
 
     if impl == "onthefly":
         seeds, m, mp, cb = onthefly_inputs(plan)
 
-        def fn(p: SoftPlan, rhs):
-            out = wigner_rec.dwt_onthefly(seeds, m, mp, cb, _split_ri(rhs),
-                                          B=p.B, tk=tk, interpret=interpret)
-            return _unsplit_ri(out, rhs.shape[2])
-        return fn
+        def raw(p: SoftPlan, rhs2):
+            return wigner_rec.dwt_onthefly(seeds, m, mp, cb, rhs2, B=p.B,
+                                           tk=tk, interpret=interpret)
+        return _wrap_batch(raw, batch)
+
+    if impl == "fused":
+        seeds, m, mp, cb = onthefly_inputs(plan)
+        perm, _, l0s = fused_metadata(plan, min(tk, plan.n_padded))
+        inv_perm = np.argsort(perm)
+        seeds_p, m_p, mp_p = seeds[perm], m[perm], mp[perm]
+
+        def raw(p: SoftPlan, rhs2):
+            out = dwt_fused.dwt_fused(seeds_p, m_p, mp_p, cb, rhs2[perm],
+                                      l0s, B=p.B, tk=tk, interpret=interpret)
+            return out[inv_perm]
+        return _wrap_batch(raw, batch)
 
     raise ValueError(impl)
 
 
 def make_idwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
-                 interpret=None):
-    """Build an idwt_fn(plan, lhs) for core.batched.inverse_clustered."""
+                 interpret=None, batch=None):
+    """Build an idwt_fn(plan, lhs) for core.batched.inverse_clustered.
+
+    impl: "dense" | "onthefly" | "fused"; batch as in make_dwt_fn (lhs
+    gains a leading V axis, packed onto lanes for one launch).
+    """
     interpret = default_interpret() if interpret is None else interpret
     if impl == "dense":
-        def fn(p: SoftPlan, lhs):
-            out = dwt_kernels.idwt_dense(p.d, _split_ri(lhs), tk=tk, tl=tl,
-                                         tj=tj, interpret=interpret)
-            return _unsplit_ri(out, lhs.shape[2])
-        return fn
+        def raw(p: SoftPlan, lhs2):
+            return dwt_kernels.idwt_dense(p.d, lhs2, tk=tk, tl=tl, tj=tj,
+                                          interpret=interpret)
+        return _wrap_batch(raw, batch)
 
     if impl == "onthefly":
         seeds, m, mp, cb = onthefly_inputs(plan)
 
-        def fn(p: SoftPlan, lhs):
-            out = wigner_rec.idwt_onthefly(seeds, m, mp, cb, _split_ri(lhs),
-                                           B=p.B, tk=tk, interpret=interpret)
-            return _unsplit_ri(out, lhs.shape[2])
-        return fn
+        def raw(p: SoftPlan, lhs2):
+            return wigner_rec.idwt_onthefly(seeds, m, mp, cb, lhs2, B=p.B,
+                                            tk=tk, interpret=interpret)
+        return _wrap_batch(raw, batch)
+
+    if impl == "fused":
+        seeds, m, mp, cb = onthefly_inputs(plan)
+        perm, _, l0s = fused_metadata(plan, min(tk, plan.n_padded))
+        inv_perm = np.argsort(perm)
+        seeds_p, m_p, mp_p = seeds[perm], m[perm], mp[perm]
+
+        def raw(p: SoftPlan, lhs2):
+            out = dwt_fused.idwt_fused(seeds_p, m_p, mp_p, cb, lhs2[perm],
+                                       l0s, B=p.B, tk=tk, interpret=interpret)
+            return out[inv_perm]
+        return _wrap_batch(raw, batch)
 
     raise ValueError(impl)
+
+
+def batched_rhs(plan: SoftPlan, S):
+    """Lane-packed DWT right-hand side for V simultaneous transforms.
+
+    S: (V, 2B, J, 2B) complex FFT-analysis outputs (stage 1 of V forward
+    transforms).  Returns (K, J, V*C*2) real -- the widened-C2 operand the
+    DWT kernels contract in a single launch (the dwt.py docstring's
+    "batching V transforms widens C2 to V*16" path).
+    """
+    from repro.core import batched as _b
+
+    rhs = jax.vmap(lambda s: _b._gather_rhs(plan, s))(S)  # (V, K, J, C, 2)
+    return pack_lanes(rhs)
 
 
 def onthefly_inputs(plan: SoftPlan):

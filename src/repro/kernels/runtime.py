@@ -1,0 +1,21 @@
+"""Kernel runtime helpers shared by every Pallas wrapper in this package.
+
+Lives below ops.py so the kernel modules themselves (dwt.py, dwt_fused.py,
+wigner_rec.py, folded_attention.py) can resolve their `interpret=None`
+defaults without importing ops (which imports them back).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """`None` -> backend default; anything else passes through unchanged."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .runtime import resolve_interpret
+
 __all__ = ["dwt_onthefly", "idwt_onthefly"]
 
 
@@ -84,12 +86,13 @@ def _fwd_kernel(L, seeds_ref, m_ref, mp_ref, cb_ref, r_ref, o_ref,
 
 
 @partial(jax.jit, static_argnames=("B", "tk", "interpret"))
-def dwt_onthefly(seeds, m, mp, cos_beta, rhs, *, B, tk=8, interpret=True):
+def dwt_onthefly(seeds, m, mp, cos_beta, rhs, *, B, tk=8, interpret=None):
     """Forward DWT without a materialized Wigner table.
 
     seeds: (K, J) f32; m, mp: (K,) int; cos_beta: (J,); rhs: (K, J, C2).
     Returns out (K, B, C2).
     """
+    interpret = resolve_interpret(interpret)
     K, J = seeds.shape
     C2 = rhs.shape[-1]
     tk = min(tk, K)
@@ -141,11 +144,12 @@ def _inv_kernel(L, seeds_ref, m_ref, mp_ref, cb_ref, l_ref, o_ref,
 
 
 @partial(jax.jit, static_argnames=("B", "tk", "interpret"))
-def idwt_onthefly(seeds, m, mp, cos_beta, lhs, *, B, tk=8, interpret=True):
+def idwt_onthefly(seeds, m, mp, cos_beta, lhs, *, B, tk=8, interpret=None):
     """Inverse DWT without a materialized Wigner table.
 
     lhs: (K, B, C2); returns g (K, J, C2).
     """
+    interpret = resolve_interpret(interpret)
     K, J = seeds.shape
     C2 = lhs.shape[-1]
     tk = min(tk, K)

@@ -27,6 +27,8 @@ import traceback
 
 import numpy as np
 import jax
+
+from repro.core.compat import cost_analysis_dict, make_mesh
 import jax.numpy as jnp
 
 from repro import configs
@@ -169,7 +171,7 @@ def build_soft(soft_cfg, ctx, mesh, direction="forward", impl="plain"):
 # ---------------------------------------------------------------------------
 
 def analyze(lowered, compiled, t_lower, t_compile, extra):
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     coll = hlolib.collective_bytes(compiled.as_text())
     flops_dev = float(ca.get("flops", -1.0))
@@ -203,9 +205,7 @@ def run_cell(arch, shape_name, multi_pod, opt_override=None, save_hlo=None,
     if mesh_shape:  # hillclimb override: same chips, different DP/TP split
         dims = tuple(int(x) for x in mesh_shape.split("x"))
         names = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, names,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(dims))
+        mesh = make_mesh(dims, names)
         mesh_name = "pod" + mesh_shape
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

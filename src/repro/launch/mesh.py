@@ -10,15 +10,16 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.compat import make_mesh
+
 from repro.models.sharding import ShardCtx
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(
+        shape, axes)
 
 
 def make_ctx(mesh) -> ShardCtx:
@@ -29,6 +30,5 @@ def make_ctx(mesh) -> ShardCtx:
 
 def make_test_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for subprocess tests (fake devices)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh(
+        (n_data, n_model), ("data", "model"))

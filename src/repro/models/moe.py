@@ -23,8 +23,9 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from . import layers
 

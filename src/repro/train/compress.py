@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size
+
 BLOCK = 2048
 
 
@@ -84,7 +86,7 @@ def compressed_allreduce(x, axis_name, err):
          (shape = x.shape with leading dim / n).
     Returns (summed x on every rank, new_err).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     shard = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
                                  tiled=True)            # (lead/n, ...) f32
     q, scale, new_err = ef_quantize(shard, err)

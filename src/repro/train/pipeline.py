@@ -30,8 +30,9 @@ from functools import partial
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 
 def pipeline_apply(stage_fn, params_stacked, x_mb, *, mesh, axis="pod"):

@@ -7,15 +7,15 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import make_mesh, shard_map_norep
 
 from repro.train.compress import compressed_allreduce
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("dp",))
     rng = np.random.default_rng(0)
     # per-rank gradients (lead dim = 8 ranks); lead/8 divisible
     g = jnp.asarray(rng.normal(size=(8, 4096)) * 0.1, jnp.float32)
@@ -25,8 +25,8 @@ def main():
         summed, new_err = compressed_allreduce(g_loc[0], "dp", err_loc[0])
         return summed[None], new_err[None]
 
-    fn = shard_map(body, mesh=mesh, in_specs=(P("dp"), P("dp")),
-                   out_specs=(P("dp"), P("dp")), check_vma=False)
+    fn = shard_map_norep(body, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                         out_specs=(P("dp"), P("dp")))
     summed, err = fn(g, err0)
     expect = np.sum(np.asarray(g), axis=0)
     got = np.asarray(summed)

