@@ -1,0 +1,140 @@
+"""Correlation-engine benchmark: rotational matching through fused lanes.
+
+For each bandwidth, plant hidden rotations and measure the two serving
+shapes the SO(3) subsystem exists for:
+
+  * bank    -- one query against an M-template bank via
+    CorrelationEngine.match_bank: M correlation grids in ceil(M/V) fused
+    V-lane iFSOFT launches.  Reports wall time, per-pair time, launch
+    count, and whether the planted template won.
+  * service -- R independent requests through SO3Service submit + drain
+    (micro-batch packing).  Reports throughput, mean latency, and lane
+    occupancy.
+
+Structural checks (CI smoke): every planted rotation recovered to within
+1.5x the pi/B grid resolution, the planted template wins its bank, launch
+counts match the ceil(N/V) packing arithmetic, and service occupancy
+reflects the configured lane width.  Rows are emitted as `JSON ` lines
+for the bench-trajectory tracker.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def run(bandwidths=(8, 16), fast=False, lane_width=4):
+    if fast:
+        bandwidths = (8,)
+    from repro.core import soft
+    from repro.so3 import (CorrelationEngine, SO3Service, angle_error, s2)
+    from repro.so3.correlate import random_rotation
+
+    rows = []
+    for B in bandwidths:
+        rng = np.random.default_rng(B)
+        grid_res = np.pi / B
+
+        # -- one-vs-many template bank ---------------------------------
+        M, planted = 8, 5
+        bank = [soft.random_s2_coeffs(B, seed=100 + i) for i in range(M)]
+        true = random_rotation(rng)
+        query = s2.rotate_s2_coeffs(bank[planted], true)
+        engine = CorrelationEngine(B, lane_width=lane_width)
+        engine.match(query, bank[planted])          # compile warmup
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        best, results = engine.match_bank(query, bank)
+        wall = time.perf_counter() - t0
+        errs = [angle_error(e, t) for e, t in zip(results[planted].euler, true)]
+        rows.append({
+            "section": "correlation", "mode": "bank", "B": B, "bank": M,
+            "V": lane_width, "wall_s": wall, "per_pair_s": wall / M,
+            "launches": engine.stats["launches"],
+            "expected_launches": -(-M // lane_width),
+            "planted": planted, "best": best,
+            "err_grid_units": max(errs) / grid_res,
+        })
+
+        # -- micro-batched service -------------------------------------
+        R = 8
+        svc = SO3Service(bandwidths=(B,), lane_width=lane_width)
+        svc.warmup()
+        jobs = []
+        for r in range(R):
+            tr = random_rotation(rng)
+            g = soft.random_s2_coeffs(B, seed=200 + r)
+            jobs.append((tr, s2.rotate_s2_coeffs(g, tr), g))
+        t0 = time.perf_counter()
+        futs = [svc.submit(f, g) for _, f, g in jobs]
+        svc.drain()
+        wall = time.perf_counter() - t0
+        worst = 0.0
+        for fut, (tr, _, _) in zip(futs, jobs):
+            res = fut.result(timeout=0)
+            worst = max(worst, max(angle_error(e, t)
+                                   for e, t in zip(res.euler, tr)) / grid_res)
+        st = svc.stats()
+        rows.append({
+            "section": "correlation", "mode": "service", "B": B,
+            "requests": R, "V": lane_width, "wall_s": wall,
+            "req_per_s": R / wall, "launches": st["launches"],
+            "occupancy": st["occupancy"],
+            "latency_mean_s": st["latency_s"]["mean"],
+            "warmup_s": st["warmup_s"][B],
+            "err_grid_units": worst,
+        })
+    return rows
+
+
+def check(rows) -> list[str]:
+    """Structural claims the subsystem must satisfy at every bandwidth."""
+    failures = []
+    for r in rows:
+        tag = f"B={r['B']} {r['mode']}"
+        if r["err_grid_units"] >= 1.5:
+            failures.append(f"{tag}: rotation not recovered "
+                            f"({r['err_grid_units']:.2f} grid units)")
+        if r["mode"] == "bank":
+            if r["best"] != r["planted"]:
+                failures.append(f"{tag}: planted template {r['planted']} "
+                                f"lost to {r['best']}")
+            if r["launches"] != r["expected_launches"]:
+                failures.append(f"{tag}: {r['launches']} launches != "
+                                f"ceil(M/V) = {r['expected_launches']}")
+        if r["mode"] == "service":
+            expect = -(-r["requests"] // r["V"])
+            if r["launches"] != expect:
+                failures.append(f"{tag}: {r['launches']} launches != "
+                                f"ceil(R/V) = {expect}")
+            if not 0 < r["occupancy"] <= 1:
+                failures.append(f"{tag}: occupancy {r['occupancy']} "
+                                f"out of range")
+    return failures
+
+
+def main(fast=False):
+    rows = run(fast=fast)
+    print("# correlation: one-vs-bank + micro-batched service, fused V lanes")
+    print("B,mode,wall_s,launches,err_grid_units,extra")
+    for r in rows:
+        extra = (f"per_pair={r['per_pair_s']:.4f}" if r["mode"] == "bank"
+                 else f"req/s={r['req_per_s']:.1f} occ={r['occupancy']:.2f}")
+        print(f"{r['B']},{r['mode']},{r['wall_s']:.4f},{r['launches']},"
+              f"{r['err_grid_units']:.3f},{extra}")
+    for r in rows:
+        print("JSON " + json.dumps(r))
+    failures = check(rows)
+    for msg in failures:
+        print("CHECK FAILED:", msg)
+    if failures:
+        raise SystemExit(1)
+    print("CHECKS OK: planted rotations recovered to grid resolution, "
+          "planted templates win their banks, launches = ceil(N/V) packing")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Sections:
   soft_runtime     measured 1-core runtime (sequential vs clustered)
   kernel_schedule  folded-attention / ragged-DWT grid savings
   dwt_schedules    dense/ragged/onthefly/fused DWT kernels + V batching
+  correlation      SO(3) rotational matching: bank + service on fused lanes
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts
 """
@@ -71,7 +72,7 @@ def lm_step(fast=False):
 
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
-            "dwt_schedules", "lm_step", "roofline")
+            "dwt_schedules", "correlation", "lm_step", "roofline")
 
 
 def main() -> None:
@@ -104,6 +105,9 @@ def main() -> None:
         elif name == "dwt_schedules":
             from benchmarks import dwt_schedules
             dwt_schedules.main(fast=args.fast)
+        elif name == "correlation":
+            from benchmarks import correlation
+            correlation.main(fast=args.fast)
         elif name == "lm_step":
             lm_step(fast=args.fast)
         elif name == "roofline":

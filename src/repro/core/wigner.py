@@ -115,14 +115,30 @@ def wigner_d_table(B: int, beta: np.ndarray | None = None) -> np.ndarray:
 
     Reference-quality table in float64; O(B^4) memory -- intended for
     B <= ~64 (tests / host reference).  Entries with l < max(|m|,|m'|) are 0.
+
+    Beta-reflected symmetry members need d at pi - beta.  On the default
+    Kostelec grid that is just the j-reversal (beta_{2B-1-j} = pi -
+    beta_j); for a caller-supplied beta array (arbitrary angles, e.g. a
+    single rotation) the fundamental table is evaluated a second time at
+    pi - beta instead -- reversing an asymmetric grid would silently
+    produce wrong reflected entries.
     """
     from . import quadrature
 
-    if beta is None:
+    fund_r = None
+    if beta is None or np.array_equal(beta, quadrature.betas(B)):
         fund, _ = wigner_d_fundamental(B)    # default grid: memoized
         beta = quadrature.betas(B)
     else:
+        beta = np.asarray(beta, dtype=np.float64)
+        if not np.all((beta > 0.0) & (beta < np.pi)):
+            # the seeds take log(sin(b/2)), log(cos(b/2)): outside (0, pi)
+            # they would silently go NaN.  Canonical ZYZ Euler beta lives
+            # in (0, pi); fold wider conventions before calling.
+            raise ValueError("wigner_d_table requires beta in the open "
+                             "interval (0, pi)")
         fund, _ = wigner_d_fundamental(B, beta)
+        fund_r, _ = wigner_d_fundamental(B, np.pi - beta)
     J = len(beta)
     d = np.zeros((B, 2 * B - 1, 2 * B - 1, J))
     pairs = fundamental_pairs(B)
@@ -130,7 +146,7 @@ def wigner_d_table(B: int, beta: np.ndarray | None = None) -> np.ndarray:
     for p, (m, mp) in enumerate(pairs):
         blk = fund[p]  # (B, J)
         s_swap = (-1.0) ** (m - mp)
-        rev = blk[:, ::-1]
+        rev = blk[:, ::-1] if fund_r is None else fund_r[p]
         lm = (parity * (-1.0) ** m)[:, None] * rev   # (-1)^{l+m} d(l, rev j)
         lmp = (parity * (-1.0) ** mp)[:, None] * rev  # (-1)^{l+m'} d(l, rev j)
         # same-beta members (l-independent signs)

@@ -31,9 +31,40 @@ import jax.numpy as jnp
 from . import ops
 
 __all__ = ["autotune_dwt", "tuned_dwt_fn", "tuned_idwt_fn", "cache_path",
-           "candidate_tiles"]
+           "candidate_tiles", "estimate_vmem_bytes", "vmem_limit_bytes"]
 
 _DEF_CACHE = "~/.cache/repro/autotune.json"
+
+# Conservative per-core VMEM ceiling (TPU cores carry ~16 MB; leave margin
+# for Pallas double-buffering of the streamed operands).
+_DEF_VMEM = 12 * 1024 * 1024
+
+
+def vmem_limit_bytes() -> int:
+    """Per-core VMEM budget for one kernel grid step.
+
+    $REPRO_VMEM_BYTES overrides the default (e.g. for a backend with a
+    different on-chip budget, or to force-skip wide-V candidates)."""
+    return int(os.environ.get("REPRO_VMEM_BYTES", _DEF_VMEM))
+
+
+def estimate_vmem_bytes(impl: str, *, L: int, J: int, C2: int, tk: int,
+                        tl: int | None = None, tj: int | None = None,
+                        itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step of a candidate tiling.
+
+    Recurrence schedules (onthefly/fused) hold seeds + the two recurrence
+    state rows (3 * TK * J), the order/cos-beta vectors, the rhs tile
+    (TK * J * C2) and the out tile (TK * L * C2); C2 = V*C*2 grows
+    linearly with lane packing, which is what caps V.  Grid schedules
+    (dense/ragged) hold a (TK, TL, TJ) d-block plus rhs/out tiles.
+    """
+    if impl in ("onthefly", "fused"):
+        return itemsize * (3 * tk * J + 2 * tk + J
+                           + tk * J * C2 + tk * L * C2)
+    tl = L if tl is None else tl
+    tj = J if tj is None else tj
+    return itemsize * (tk * tl * tj + tk * tj * C2 + tk * tl * C2)
 
 
 def cache_path() -> pathlib.Path:
@@ -90,35 +121,52 @@ def _time_fn(fn, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _key(plan, impl: str, V: int) -> str:
+def _key(plan, impl: str, V, limit: int) -> str:
+    # the VMEM ceiling is part of the key: a winner measured under a
+    # tight $REPRO_VMEM_BYTES (guard skipped the wide-V candidates) must
+    # not be served when the budget is back to normal, and vice versa.
     return (f"{impl}/B{plan.B}/K{plan.n_padded}/{jnp.dtype(plan.d.dtype).name}"
-            f"/{jax.default_backend()}/V{V}")
+            f"/{jax.default_backend()}/V{V}/M{limit}")
 
 
 def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
                  refresh: bool = False, cache: str | os.PathLike | None = None,
-                 interpret=None) -> dict:
+                 interpret=None, vmem_limit: int | None = None) -> dict:
     """Measure-and-cache the best (tk, tl, tj, V) for one schedule.
 
     Returns {"tk", "tl", "tj", "V", "per_transform_s"}.  Sweeps the
     candidate tilings for every V in Vs (V > 1 packs V transforms onto the
     kernel lane axis; scored per transform so wider packing must EARN its
     place by amortizing launch + Wigner-generation cost).
+
+    Candidates whose static per-grid-step footprint exceeds the VMEM
+    ceiling (vmem_limit, default :func:`vmem_limit_bytes`) are skipped
+    BEFORE launch -- wide-V lane packing (V > 4) at large B would
+    otherwise fail at compile time on hardware instead of gracefully
+    losing the sweep.
     """
     path = pathlib.Path(cache) if cache is not None else cache_path()
     store = _load_cache(path)
-    key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0])
+    limit = vmem_limit_bytes() if vmem_limit is None else vmem_limit
+    key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0], limit)
     if not refresh and key in store:
         return store[key]
 
     K, L, J = plan.d.shape
     C = plan.gather_m.shape[1]
+    itemsize = jnp.dtype(plan.d.dtype).itemsize
     rng = np.random.default_rng(0)
     best = None
+    n_skipped = 0
     for V in Vs:
         shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
         rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
         for tile in candidate_tiles(K, L, J, impl):
+            if estimate_vmem_bytes(impl, L=L, J=J, C2=V * C * 2,
+                                   itemsize=itemsize,
+                                   **tile) > limit:
+                n_skipped += 1
+                continue
             fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
                                  batch=None if V == 1 else V, **tile)
             try:
@@ -128,7 +176,10 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
             if best is None or t < best["per_transform_s"]:
                 best = dict(tile, V=V, per_transform_s=t)
     if best is None:
-        raise RuntimeError(f"no viable tiling for {key}")
+        raise RuntimeError(
+            f"no viable tiling for {key}"
+            + (f" ({n_skipped} candidates over the {limit}-byte VMEM "
+               f"ceiling; raise $REPRO_VMEM_BYTES?)" if n_skipped else ""))
     _store_cache(path, {key: best})
     return best
 

@@ -30,7 +30,8 @@ from . import wigner_rec
 from .runtime import default_interpret
 
 __all__ = ["default_interpret", "make_dwt_fn", "make_idwt_fn",
-           "onthefly_inputs", "fused_metadata", "batched_rhs", "attention"]
+           "onthefly_inputs", "fused_metadata", "batched_rhs", "pad_lanes",
+           "attention"]
 
 
 def _split_ri(x):
@@ -53,6 +54,23 @@ def unpack_lanes(x, V, C):
     """(K, A, V*C*2) -> (V, K, A, C, 2), inverse of pack_lanes."""
     K, A, _ = x.shape
     return jnp.moveaxis(x.reshape(K, A, V, C, 2), 2, 0)
+
+
+def pad_lanes(x, V):
+    """Zero-pad a partial transform stack (n, ...) with n <= V up to the
+    lane width V of a batch-compiled kernel.
+
+    Returns (padded, n).  Padding with zeros keeps every launch on ONE
+    compiled kernel shape (no per-occupancy recompiles in a serving loop);
+    the padded lanes produce zero outputs the caller slices off.
+    """
+    n = x.shape[0]
+    if n > V:
+        raise ValueError(f"stack of {n} transforms exceeds lane width {V}")
+    if n < V:
+        x = jnp.concatenate(
+            [x, jnp.zeros((V - n,) + x.shape[1:], x.dtype)])
+    return x, n
 
 
 def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):

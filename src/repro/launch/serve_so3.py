@@ -1,0 +1,100 @@
+"""SO(3) correlation service launcher: micro-batched rotational matching.
+
+``PYTHONPATH=src python -m repro.launch.serve_so3 --bandwidth 8 \
+      --requests 16 --lane-width 4``
+
+Synthesizes a rotational-matching workload (random spherical templates,
+hidden rotations), drives it through :class:`repro.so3.SO3Service` --
+warmup, micro-batch packing into fused V-lane iFSOFT launches, latency /
+throughput / occupancy stats -- and verifies every recovered rotation
+against its hidden truth.  ``--threaded`` exercises the background worker
+with jittered arrivals; the default drains synchronously (deterministic
+packing).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bandwidth", type=int, nargs="+", default=[8],
+                    help="bandwidth(s) served; requests cycle through them")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--lane-width", type=int, default=4)
+    ap.add_argument("--tk", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--threaded", action="store_true",
+                    help="background worker + jittered arrivals instead of "
+                         "submit-all + drain")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core import soft
+    from repro.so3 import SO3Service, angle_error, s2
+    from repro.so3.correlate import random_rotation
+
+    svc = SO3Service(bandwidths=args.bandwidth, dtype=jnp.float64,
+                     lane_width=args.lane_width, tk=args.tk,
+                     max_wait_ms=args.max_wait_ms)
+    warm = svc.warmup()
+    for B, s in warm.items():
+        print(f"warmup B={B}: {s:.2f}s (plan + Wigner seeds + fused kernel "
+              f"compile, V={args.lane_width})")
+
+    rng = np.random.default_rng(args.seed)
+    jobs = []
+    for r in range(args.requests):
+        B = args.bandwidth[r % len(args.bandwidth)]
+        true = random_rotation(rng)
+        g = soft.random_s2_coeffs(B, seed=args.seed + r)
+        f = s2.rotate_s2_coeffs(g, true)
+        jobs.append((B, true, f, g))
+
+    t0 = time.perf_counter()
+    if args.threaded:
+        svc.start()
+    futures = []
+    for B, true, f, g in jobs:
+        futures.append(svc.submit(f, g, bandwidth=B))
+        if args.threaded:
+            time.sleep(float(rng.uniform(0, args.max_wait_ms / 2e3)))
+    if args.threaded:
+        svc.stop(drain=True)
+    else:
+        svc.drain()
+    results = [fut.result(timeout=120) for fut in futures]
+    wall = time.perf_counter() - t0
+
+    worst = 0.0
+    for (B, true, _, _), res in zip(jobs, results):
+        errs = (angle_error(res.alpha, true[0]),
+                angle_error(res.beta, true[1]),
+                angle_error(res.gamma, true[2]))
+        worst = max(worst, max(errs) * B / np.pi)  # in grid-resolution units
+        assert all(e < 1.5 * np.pi / B for e in errs), \
+            f"rotation not recovered at B={B}: {errs}"
+
+    st = svc.stats()
+    lat = st.get("latency_s", {})
+    print(f"served {st['completed']} requests in {wall:.2f}s "
+          f"({st['completed'] / wall:.1f} req/s)")
+    print(f"launches: {st['launches']}  packed transforms: "
+          f"{st['transforms']}  lane occupancy: {st['occupancy']:.2f}")
+    if lat:
+        print(f"latency  mean {lat['mean'] * 1e3:.1f} ms  "
+              f"p50 {lat['p50'] * 1e3:.1f} ms  p95 {lat['p95'] * 1e3:.1f} ms")
+    print(f"worst recovery error: {worst:.3f} grid steps (pi/B units)")
+    print("OK: all rotations recovered to grid resolution")
+    return st
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Spherical-harmonic transforms on the 2B x 2B grid (stage 0 of matching).
+
+A bandwidth-B function on S^2 sampled at (alpha_i, beta_j) with
+alpha_i = i*pi/B and beta_j on the Kostelec grid is analyzed/synthesized
+against the basis
+
+    Ytil_{lm}(alpha, beta) = e^{-i m alpha} d^l_{m0}(beta),
+
+the m' = 0 column of the repo's Wigner-D convention -- so an S^2 function
+is exactly an SO(3) function that is constant in gamma, and the S^2
+transforms below are the m' = 0 slice of the FSOFT/iFSOFT:
+
+    synthesis: f(a_i, b_j)  = sum_{l,m} flm[l, m] Ytil_{lm}(a_i, b_j)
+    analysis:  flm[l, m]    = (2l+1)/(4 pi) sum_j w_B(j) d^l_{m0}(b_j)
+                              * sum_i f(a_i, b_j) e^{+i m a_i}
+
+Exactness of the analysis weights follows from the SO(3) sampling theorem
+(paper Eq. 6): lifting f to the 2B^3 Euler grid and running forward_soft
+gives fhat[l, m, m'] = delta_{m'0} flm[l, m] with the identical quadrature
+(the gamma sum contributes the factor 2B that turns 1/(8 pi B) into
+1/(4 pi)).
+
+The m' = 0 Wigner column IS the associated Legendre function (up to
+normalization), and it is read straight out of the fundamental-domain
+table the clustered DWT consumes (core.wigner.wigner_d_fundamental) --
+no second recurrence implementation.
+
+Coefficient layout: complex (B, 2B-1) with flm[l, m + B - 1]; cells with
+|m| > l are zero.  Sample layout: complex (2B, 2B) with f[i, j] at
+(alpha_i, beta_j).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import quadrature, soft, wigner
+
+__all__ = ["legendre_columns", "s2_synthesis", "s2_analysis",
+           "rotate_s2_coeffs"]
+
+
+_LEG_CACHE: dict = {}
+
+
+def legendre_columns(B: int, dtype=np.float64) -> np.ndarray:
+    """Packed m' = 0 Wigner columns leg[l, m + B - 1, j] = d(l, m, 0; b_j).
+
+    Rows come from the fundamental-domain table (0 <= m' <= m: pair (m, 0)
+    sits at row m(m+1)/2); negative orders use the symmetry
+    d(l, -m, 0) = (-1)^m d(l, m, 0) (paper Eq. 3).  Memoized per (B, dtype)
+    and marked read-only, like the fundamental table itself.
+    """
+    key = (B, np.dtype(dtype).str)
+    hit = _LEG_CACHE.get(key)
+    if hit is not None:
+        return hit
+    fund, _ = wigner.wigner_d_fundamental(B)        # (P, L, J) float64
+    rows = np.arange(B) * (np.arange(B) + 1) // 2   # pair (m, 0) -> row
+    pos = fund[rows]                                # (B, L, J), index = m >= 0
+    leg = np.zeros((B, 2 * B - 1, 2 * B))
+    for m in range(B):
+        leg[:, B - 1 + m, :] = pos[m]
+        if m:
+            leg[:, B - 1 - m, :] = (-1.0) ** m * pos[m]
+    leg = leg.astype(dtype)
+    leg.flags.writeable = False
+    _LEG_CACHE[key] = leg
+    return leg
+
+
+# the m -> FFT-bin layout is the SO(3) one (m mod 2B); share it so a
+# core layout change can never desynchronize the S^2 transforms
+_bin_index = soft._bin_index
+
+
+def s2_synthesis(flm):
+    """Inverse S^2 transform: coefficients (B, 2B-1) -> samples (2B, 2B).
+
+    Legendre contraction over l per order m, then the alpha FFT (same
+    bin layout as the iFSOFT's m -> i stage).
+    """
+    flm = jnp.asarray(flm)
+    B = flm.shape[0]
+    leg = jnp.asarray(legendre_columns(B), dtype=flm.real.dtype)
+    g = jnp.einsum("lmj,lm->mj", leg, flm)          # (2B-1, 2B)
+    gbin = jnp.zeros((2 * B, 2 * B), dtype=flm.dtype)
+    gbin = gbin.at[jnp.asarray(_bin_index(B))].set(g)
+    return jnp.fft.fft(gbin, axis=0)
+
+
+def s2_analysis(f, B: int):
+    """Forward S^2 transform: samples (2B, 2B) -> coefficients (B, 2B-1).
+
+    Exact on bandwidth-B inputs (SO(3) sampling theorem restricted to the
+    m' = 0 column; see the module docstring).
+    """
+    f = jnp.asarray(f)
+    S = 2 * B * jnp.fft.ifft(f, axis=0)             # sum_i f e^{+im a_i}
+    Ssel = S[jnp.asarray(_bin_index(B))]            # (2B-1, 2B)
+    leg = jnp.asarray(legendre_columns(B), dtype=f.real.dtype)
+    w = jnp.asarray(quadrature.weights(B), dtype=f.real.dtype)
+    scale = jnp.asarray((2 * np.arange(B) + 1) / (4 * np.pi),
+                        dtype=f.real.dtype)
+    out = jnp.einsum("lmj,j,mj->lm", leg, w, Ssel)
+    return scale[:, None] * out * jnp.asarray(soft.s2_coeff_mask(B))
+
+
+def rotate_s2_coeffs(flm, euler):
+    """(Lambda(R) f)_{lm} = sum_{m'} D^l_{mm'}(R) flm[l, m'] with
+    D = e^{-i m alpha} d(l, m, m'; beta) e^{-i m' gamma} (repo convention).
+
+    Host-side reference (dense Wigner table at one beta); used by the
+    demo/tests to plant a hidden rotation.  Canonical ZYZ Euler angles:
+    beta must lie in the open interval (0, pi) -- wigner_d_table raises
+    otherwise (its log-domain seeds would go NaN silently).
+    """
+    flm = np.asarray(flm)
+    B = flm.shape[0]
+    a, b, c = euler
+    d = wigner.wigner_d_table(B, np.asarray([b]))[..., 0]  # (B, 2B-1, 2B-1)
+    m = np.arange(-(B - 1), B)
+    D = np.exp(-1j * m[:, None] * a) * d * np.exp(-1j * m[None, :] * c)
+    return np.einsum("lmp,lp->lm", D, flm)

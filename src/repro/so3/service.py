@@ -1,0 +1,271 @@
+"""Micro-batching correlation service over the fused iFSOFT lanes.
+
+P3DFFT's lesson (PAPERS.md): a tuned transform core earns its keep when a
+framework packs real workloads through it.  This service accepts
+rotational-matching requests one at a time -- any arrival order, any mix
+of bandwidths -- and packs same-bandwidth requests into V-wide fused
+kernel launches (V = the engine lane width), so concurrent traffic
+amortizes each on-the-fly Wigner row V ways instead of launching per
+request.
+
+Operation modes:
+
+  * synchronous: ``submit()`` then ``drain()`` -- deterministic packing,
+    what the tests and batch jobs use;
+  * background: ``start()`` spawns a worker that fills lanes for up to
+    ``max_wait_ms`` after the first arrival, then launches (partial lanes
+    are zero-padded; the compiled kernel shape never changes).
+
+``warmup()`` pre-builds the plan / Wigner / kernel caches per configured
+(bandwidth, dtype) and runs one padded dummy launch so the first real
+request never pays compilation.  ``stats()`` reports per-request latency
+quantiles, launch counts, and lane occupancy.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import soft
+
+from .correlate import CorrelationEngine, peak_euler
+
+__all__ = ["SO3Service", "infer_bandwidth"]
+
+
+def infer_bandwidth(x) -> int:
+    """Bandwidth from an S^2 payload: coefficients (B, 2B-1) or samples
+    (2B, 2B)."""
+    s = np.shape(x)
+    if len(s) == 2 and s[1] == 2 * s[0] - 1:
+        return int(s[0])
+    if len(s) == 2 and s[0] == s[1] and s[0] % 2 == 0:
+        return int(s[0]) // 2
+    raise ValueError(f"cannot infer bandwidth from payload shape {s}")
+
+
+@dataclasses.dataclass
+class _Pending:
+    seq: int
+    f: object
+    g: object
+    refine: bool
+    future: Future
+    t_submit: float
+
+
+class SO3Service:
+    """Queue + packer in front of per-bandwidth CorrelationEngines."""
+
+    def __init__(self, bandwidths=(8,), *, dtype=jnp.float64,
+                 lane_width: int = 4, impl: str = "fused", tk: int = 8,
+                 interpret=None, max_wait_ms: float = 2.0):
+        self.bandwidths = tuple(bandwidths)
+        self.lane_width = lane_width
+        self.max_wait_ms = max_wait_ms
+        self._engine_kw = dict(dtype=dtype, impl=impl, tk=tk,
+                               interpret=interpret, lane_width=lane_width)
+        self._engines: dict[int, CorrelationEngine] = {}
+        self._queues: dict[int, collections.deque] = {}
+        self._lock = threading.Lock()
+        self._build_lock = threading.Lock()
+        # serializes engine use (launches + engine-stats mutation) between
+        # the background worker and synchronous drain()/warmup() callers
+        self._serve_lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._running = False
+        self._seq = 0
+        self._latencies: list[float] = []
+        self._completed = 0
+        self._warmup_s: dict[int, float] = {}
+
+    # -- engines ------------------------------------------------------------
+
+    def engine(self, B: int) -> CorrelationEngine:
+        with self._lock:
+            eng = self._engines.get(B)
+        if eng is None:
+            # serialize creation: an engine build is a plan construction
+            # plus a kernel compile, too expensive to race and discard
+            with self._build_lock:
+                with self._lock:
+                    eng = self._engines.get(B)
+                if eng is None:
+                    eng = CorrelationEngine(B, **self._engine_kw)
+                    with self._lock:
+                        self._engines[B] = eng
+        return eng
+
+    def warmup(self) -> dict[int, float]:
+        """Build plans + compile one padded fused launch per configured
+        bandwidth (fills the plan / Wigner / kernel caches).  Returns
+        seconds spent per bandwidth."""
+        for B in self.bandwidths:
+            t0 = time.perf_counter()
+            eng = self.engine(B)
+            with self._serve_lock:
+                before = dict(eng.stats)  # don't wipe real serving counters
+                z = soft.random_s2_coeffs(B, seed=0)
+                res = eng.match(z, z, refine=False)
+                assert res.index is not None
+                eng.stats.update(before)  # warmup launch isn't serving load
+            self._warmup_s[B] = time.perf_counter() - t0
+        return dict(self._warmup_s)
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, f, g, *, bandwidth: int | None = None,
+               refine: bool = True) -> Future:
+        """Enqueue one match request; resolves to a MatchResult."""
+        B = infer_bandwidth(f) if bandwidth is None else bandwidth
+        fut: Future = Future()
+        with self._cv:
+            self._seq += 1
+            self._queues.setdefault(B, collections.deque()).append(
+                _Pending(self._seq, f, g, refine, fut, time.perf_counter()))
+            self._cv.notify()
+        return fut
+
+    def _pop_group(self, B: int, limit: int) -> list[_Pending]:
+        q = self._queues.get(B)
+        out = []
+        while q and len(out) < limit:
+            out.append(q.popleft())
+        return out
+
+    def _process_group(self, B: int, group: list[_Pending]) -> None:
+        """Run one packed launch group (<= lane_width requests, one B)."""
+        eng = self.engine(B)
+        try:
+            with self._serve_lock:
+                fs = [eng.as_coeffs(p.f) for p in group]
+                gs = [eng.as_coeffs(p.g) for p in group]
+                C = eng.correlation_grids(fs, gs)  # ONE fused launch/lane
+            done = time.perf_counter()
+            results = [peak_euler(C[n], B, refine=p.refine)
+                       for n, p in enumerate(group)]
+        except Exception as e:  # pragma: no cover - surfaced via futures
+            for p in group:
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return
+        with self._lock:        # stats() reads these under the same lock
+            self._latencies.extend(done - p.t_submit for p in group)
+            self._completed += len(group)
+        for p, r in zip(group, results):
+            p.future.set_result(r)
+
+    def drain(self) -> int:
+        """Process every queued request now (synchronous packing).
+
+        Same-bandwidth requests are packed FIFO into lane_width-wide
+        launches regardless of arrival interleaving across bandwidths.
+        Returns the number of requests served.
+        """
+        served = 0
+        while True:
+            with self._lock:
+                Bs = [B for B, q in self._queues.items() if q]
+            if not Bs:
+                return served
+            for B in Bs:
+                while True:
+                    with self._lock:
+                        group = self._pop_group(B, self.lane_width)
+                    if not group:
+                        break
+                    self._process_group(B, group)
+                    served += len(group)
+
+    # -- background worker --------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the micro-batching worker (idempotent)."""
+        with self._lock:
+            if self._running:
+                return
+            self._running = True
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="so3-service")
+        self._worker.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker.  drain=True serves what's still queued;
+        drain=False cancels it (no Future is ever left unresolved)."""
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=60)
+            self._worker = None
+        if drain:
+            self.drain()
+        else:
+            with self._lock:
+                dropped = [p for q in self._queues.values() for p in q]
+                for q in self._queues.values():
+                    q.clear()
+            for p in dropped:
+                p.future.cancel()
+
+    def _run(self) -> None:
+        wait_s = self.max_wait_ms / 1e3
+        while True:
+            with self._cv:
+                while self._running and not any(self._queues.values()):
+                    self._cv.wait(timeout=0.1)
+                if not self._running:
+                    return
+                # serve the bandwidth with the oldest waiting request
+                B = min((q[0].t_submit, b) for b, q in self._queues.items()
+                        if q)[1]
+                deadline = self._queues[B][0].t_submit + wait_s
+                while (self._running
+                       and len(self._queues[B]) < self.lane_width
+                       and time.perf_counter() < deadline):
+                    self._cv.wait(timeout=max(deadline - time.perf_counter(),
+                                              1e-4))
+                if not self._running:
+                    return      # stop() decides: drain serves, else cancel
+                group = self._pop_group(B, self.lane_width)
+            if group:
+                self._process_group(B, group)
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Aggregate serving stats across all engines."""
+        with self._lock:
+            lat = sorted(self._latencies)
+            eng_stats = {B: dict(e.stats) for B, e in self._engines.items()}
+            queued = sum(len(q) for q in self._queues.values())
+            completed = self._completed
+            warmup_s = dict(self._warmup_s)
+        launches = sum(s["launches"] for s in eng_stats.values())
+        transforms = sum(s["transforms"] for s in eng_stats.values())
+        out = {
+            "completed": completed,
+            "queued": queued,
+            "launches": launches,
+            "transforms": transforms,
+            "lane_width": self.lane_width,
+            "occupancy": transforms / (launches * self.lane_width)
+            if launches else 0.0,
+            "warmup_s": warmup_s,
+            "engines": eng_stats,
+        }
+        if lat:
+            out["latency_s"] = {
+                "mean": float(np.mean(lat)),
+                "p50": float(lat[len(lat) // 2]),
+                "p95": float(lat[min(len(lat) - 1, int(0.95 * len(lat)))]),
+                "max": float(lat[-1]),
+            }
+        return out

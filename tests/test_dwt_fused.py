@@ -169,3 +169,45 @@ def test_candidate_tiles_respect_divisibility():
             assert 24 % cand["tk"] == 0
             assert 16 % cand["tl"] == 0
             assert 32 % cand["tj"] == 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget guard: wide-V candidates skip instead of failing at compile
+# ---------------------------------------------------------------------------
+
+def test_vmem_estimate_grows_with_lanes_and_tiles():
+    kw = dict(L=16, J=32, itemsize=4)
+    base = autotune.estimate_vmem_bytes("fused", tk=8, C2=16, **kw)
+    assert base > 0
+    # lane packing (C2 = V*C*2) and cluster tiling both grow the footprint
+    assert autotune.estimate_vmem_bytes("fused", tk=8, C2=128, **kw) > base
+    assert autotune.estimate_vmem_bytes("fused", tk=16, C2=16, **kw) > base
+    dense = autotune.estimate_vmem_bytes("dense", tk=8, tl=16, tj=32, C2=16,
+                                         **kw)
+    assert dense > 0
+
+
+def test_vmem_limit_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_VMEM_BYTES", "12345")
+    assert autotune.vmem_limit_bytes() == 12345
+
+
+def test_autotune_skips_over_budget_lane_candidates(tmp_path):
+    """With a ceiling that only admits the narrowest V=1 candidate, a
+    Vs=(1, 8) sweep must degrade gracefully to V=1 -- not die compiling
+    the 8-lane kernel."""
+    plan = batched.build_plan(8, dtype=jnp.float32, pad_to=4)
+    K, L, J = plan.d.shape
+    tks = [c["tk"] for c in autotune.candidate_tiles(K, L, J, "fused")]
+    limit = autotune.estimate_vmem_bytes("fused", tk=min(tks), C2=16,
+                                         L=L, J=J, itemsize=4)
+    cfg = autotune.autotune_dwt(plan, "fused", Vs=(1, 8), reps=1,
+                                cache=tmp_path / "c.json", vmem_limit=limit)
+    assert cfg["V"] == 1 and cfg["tk"] == min(tks)
+
+
+def test_autotune_all_candidates_over_budget_raises(tmp_path):
+    plan = batched.build_plan(8, dtype=jnp.float32, pad_to=4)
+    with pytest.raises(RuntimeError, match="VMEM"):
+        autotune.autotune_dwt(plan, "fused", Vs=(8,), reps=1,
+                              cache=tmp_path / "c.json", vmem_limit=1)
