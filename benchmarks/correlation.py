@@ -11,8 +11,11 @@ shapes the SO(3) subsystem exists for:
     (micro-batch packing).  Reports throughput, mean latency, and lane
     occupancy.
 
-Structural checks (CI smoke): every planted rotation recovered to within
-1.5x the pi/B grid resolution, the planted template wins its bank, launch
+Engines execute on `repro.plan` Transforms (the plan resolves the iDWT
+schedule; `lane_width` here pins V so the packing arithmetic below is
+deterministic).  Structural checks (CI smoke): every planted rotation
+recovered to within 1.5x the pi/B grid resolution, the planted template
+wins its bank with a normalized cross-correlation score near 1, launch
 counts match the ceil(N/V) packing arithmetic, and service occupancy
 reflects the configured lane width.  Rows are emitted as `JSON ` lines
 for the bench-trajectory tracker.
@@ -55,6 +58,8 @@ def run(bandwidths=(8, 16), fast=False, lane_width=4):
             "launches": engine.stats["launches"],
             "expected_launches": -(-M // lane_width),
             "planted": planted, "best": best,
+            "score_planted": results[planted].score,
+            "schedule_source": engine.transform.describe()["source"],
             "err_grid_units": max(errs) / grid_res,
         })
 
@@ -104,6 +109,9 @@ def check(rows) -> list[str]:
             if r["launches"] != r["expected_launches"]:
                 failures.append(f"{tag}: {r['launches']} launches != "
                                 f"ceil(M/V) = {r['expected_launches']}")
+            if not 0.8 < r["score_planted"] <= 1.0 + 1e-9:
+                failures.append(f"{tag}: planted NCC score "
+                                f"{r['score_planted']:.3f} not in (0.8, 1]")
         if r["mode"] == "service":
             expect = -(-r["requests"] // r["V"])
             if r["launches"] != expect:
@@ -132,7 +140,8 @@ def main(fast=False):
     if failures:
         raise SystemExit(1)
     print("CHECKS OK: planted rotations recovered to grid resolution, "
-          "planted templates win their banks, launches = ceil(N/V) packing")
+          "planted templates win their banks (NCC score ~1), "
+          "launches = ceil(N/V) packing")
     return rows
 
 

@@ -32,8 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import batched
-from repro.kernels import dwt_fused as dwt_fused_k
+from repro import plan as plan_mod
 from repro.kernels import ops
 
 
@@ -80,25 +79,32 @@ def run(bandwidths=(16, 32, 64), fast=False, reps=3):
     rows = []
     rng = np.random.default_rng(0)
     for B in bandwidths:
-        plan = batched.build_plan(B, dtype=jnp.float32, pad_to=8)
+        # one planner call per schedule; all share ONE SoftPlan (same
+        # (B, dtype, pad_to) key) so the rhs shapes line up across impls
+        tk0 = 8
+        tl0, tj0 = max(B // 8, 8), 2 * B
+        ts = {impl: plan_mod.plan(B, dtype=jnp.float32, impl=impl, V=1,
+                                  tk=tk0, tl=tl0, tj=tj0)
+              for impl in ("dense", "ragged", "onthefly", "fused")}
+        plan = ts["fused"].soft_plan
         K, L, J = plan.d.shape
-        tk, tl, tj = 8, max(B // 8, 8), J
+        tk, tl, tj = tk0, tl0, tj0
         b_reps = 1 if B >= 64 else reps   # dense @ B=64 is ~80 s/rep on CPU
         metrics = schedule_metrics(plan, tk, tl, tj)
         rhs = jnp.asarray(rng.normal(size=(K, J, 8, 2)), jnp.float32)
-        for impl in ("dense", "ragged", "onthefly", "fused"):
-            fn = ops.make_dwt_fn(plan, impl, tk=tk, tl=tl, tj=tj)
-            wall = _time(fn, plan, rhs, reps=b_reps)
+        for impl, t in ts.items():
+            assert t.soft_plan is plan    # shared plan across schedules
+            wall = _time(t.dwt_fn, plan, rhs, reps=b_reps)
             rows.append({"section": "dwt_schedules", "B": B, "dtype": "f32",
                          "schedule": impl, "tk": tk, "tl": tl, "tj": tj,
                          "wall_s": wall, **metrics[impl]})
         # multi-transform batching: one V=4 launch vs four V=1 launches
         V = 4
         rhs4 = jnp.asarray(rng.normal(size=(V, K, J, 8, 2)), jnp.float32)
-        fn1 = ops.make_dwt_fn(plan, "fused", tk=tk)
-        fn4 = ops.make_dwt_fn(plan, "fused", tk=tk, batch=V)
-        t1 = _time(fn1, plan, rhs, reps=b_reps)
-        t4 = _time(fn4, plan, rhs4, reps=b_reps)
+        t4p = plan_mod.plan(B, dtype=jnp.float32, impl="fused", V=V, tk=tk0,
+                            tl=tl0, tj=tj0)
+        t1 = _time(ts["fused"].dwt_fn, plan, rhs, reps=b_reps)
+        t4 = _time(t4p.dwt_fn_batch, plan, rhs4, reps=b_reps)
         rows.append({"section": "dwt_schedules", "B": B, "dtype": "f32",
                      "schedule": "fused", "V": V, "wall_s_total": t4,
                      "per_transform_s": t4 / V,

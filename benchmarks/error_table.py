@@ -12,13 +12,13 @@ import time
 
 import numpy as np
 
-from repro.core import batched, soft
+from repro.core import soft
 
 
-def roundtrip(plan, B, seed, dtype=np.complex128):
+def roundtrip(t, B, seed, dtype=np.complex128):
     fhat = soft.random_coeffs(B, seed).astype(dtype)
-    f = batched.inverse_clustered(plan, fhat)
-    back = np.asarray(batched.forward_clustered(plan, f))
+    f = t.inverse(fhat)
+    back = np.asarray(t.forward(f))
     mask = soft.coeff_mask(B)
     err = np.abs(back - fhat)[mask]
     ref = np.abs(np.asarray(fhat))[mask]
@@ -27,17 +27,18 @@ def roundtrip(plan, B, seed, dtype=np.complex128):
 
 def run(bandwidths=(16, 32, 64), runs=3, fast=False):
     import jax.numpy as jnp
+    from repro import plan
     rows = []
     if fast:
         bandwidths, runs = (16, 32), 2
     for B in bandwidths:
         t0 = time.time()
-        plan = batched.build_plan(B, dtype=jnp.float64)
+        t = plan(B, dtype=jnp.float64, impl="reference")
         t_plan = time.time() - t0
         abss, rels = [], []
         t0 = time.time()
         for s in range(runs):
-            a, r = roundtrip(plan, B, seed=s)
+            a, r = roundtrip(t, B, seed=s)
             abss.append(a)
             rels.append(r)
         t_rt = (time.time() - t0) / runs
@@ -51,8 +52,8 @@ def run(bandwidths=(16, 32, 64), runs=3, fast=False):
         })
         # f32 device path at the smallest bandwidth (precision ladder)
         if B == bandwidths[0]:
-            plan32 = batched.build_plan(B, dtype=jnp.float32)
-            a32, r32 = roundtrip(plan32, B, 0, dtype=np.complex64)
+            t32 = plan(B, dtype=jnp.float32, impl="reference")
+            a32, r32 = roundtrip(t32, B, 0, dtype=np.complex64)
             rows.append({"B": B, "dtype": "f32",
                          "abs_err_mean": float(a32),
                          "rel_err_mean": float(r32)})

@@ -1,0 +1,123 @@
+"""Planner smoke benchmark: plan build time, cache hit rate, executor
+wall time.
+
+The planner (`repro.plan`) is the PR-3 plan-then-execute layer: one
+``plan(...)`` call resolves the kernel schedule (through the autotune
+VMEM guard), builds the SoftPlan / Wigner / kernel resources, and is
+memoized so identical configurations share one Transform.  This section
+measures exactly the three things the layer promises:
+
+  * build_s      -- cold plan() (schedule resolution + resource build)
+  * rebuild_s    -- identical plan() again (must be a cache hit: the
+                    SAME Transform object, orders of magnitude faster)
+  * hit_rate     -- planner cache hits / lookups over the section
+  * executor wall time -- single forward/inverse and a lane-packed
+                    batch through the plan's executors, with roundtrip
+                    error at paper-Table-1 magnitudes
+
+Structural checks (CI smoke): the rebuild is an identity cache hit, the
+roundtrip error is at f64 magnitudes, and the batch executor's launch
+accounting matches the ceil(n/V) lane packing.  Rows are emitted as
+`JSON ` lines for the bench-trajectory tracker.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def run(bandwidths=(8, 16), fast=False):
+    if fast:
+        bandwidths = (8,)
+    import jax
+    import jax.numpy as jnp
+    from repro import plan as plan_mod
+    from repro.core import soft
+
+    plan_mod.clear_cache()
+    rows = []
+    for B in bandwidths:
+        t0 = time.perf_counter()
+        t = plan_mod.plan(B, impl="fused", V=2, tk=4)
+        build_s = time.perf_counter() - t0
+
+        fhat = soft.random_coeffs(B, seed=0)
+        jax.block_until_ready(t.inverse(fhat))       # compile warmup
+        t.reset_stats()
+
+        t0 = time.perf_counter()
+        f = t.inverse(fhat)
+        back = np.asarray(t.forward(f))
+        roundtrip_s = time.perf_counter() - t0
+        err = float(np.abs(back - fhat)[soft.coeff_mask(B)].max())
+
+        n = 3                                        # partial lanes: V=2
+        fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, s))
+                           for s in range(n)])
+        t.reset_stats()
+        t0 = time.perf_counter()
+        jax.block_until_ready(t.inverse_batch(fhats))
+        batch_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        t_again = plan_mod.plan(B, impl="fused", V=2, tk=4)
+        rebuild_s = time.perf_counter() - t0
+        stats = plan_mod.cache_stats()
+
+        rows.append({
+            "section": "plan", "B": B, "impl": t.impl, "V": t.V,
+            "source": t.describe()["source"],
+            "build_s": build_s, "rebuild_s": rebuild_s,
+            "cache_hit": t_again is t,
+            "hit_rate": stats["hits"] / (stats["hits"] + stats["misses"]),
+            "roundtrip_s": roundtrip_s, "batch_s": batch_s,
+            "batch_n": n, "launches": t.stats["launches"],
+            "expected_launches": -(-n // t.V),
+            "padded_lanes": t.stats["padded_lanes"],
+            "max_abs_err": err,
+        })
+    return rows
+
+
+def check(rows) -> list[str]:
+    failures = []
+    for r in rows:
+        tag = f"B={r['B']}"
+        if not r["cache_hit"]:
+            failures.append(f"{tag}: identical plan() was not a cache hit")
+        if r["hit_rate"] <= 0:
+            failures.append(f"{tag}: planner cache hit rate is zero")
+        if r["max_abs_err"] >= 1e-11:
+            failures.append(f"{tag}: roundtrip error {r['max_abs_err']:.2e} "
+                            f"not at f64 magnitudes")
+        if r["launches"] != r["expected_launches"]:
+            failures.append(f"{tag}: {r['launches']} batch launches != "
+                            f"ceil(n/V) = {r['expected_launches']}")
+    return failures
+
+
+def main(fast=False):
+    rows = run(fast=fast)
+    print("# plan: build time, cache hits, executor wall time")
+    print("B,impl,V,build_s,rebuild_s,hit_rate,roundtrip_s,batch_s,err")
+    for r in rows:
+        print(f"{r['B']},{r['impl']},{r['V']},{r['build_s']:.4f},"
+              f"{r['rebuild_s']:.6f},{r['hit_rate']:.2f},"
+              f"{r['roundtrip_s']:.4f},{r['batch_s']:.4f},"
+              f"{r['max_abs_err']:.2e}")
+    for r in rows:
+        print("JSON " + json.dumps(r))
+    failures = check(rows)
+    for msg in failures:
+        print("CHECK FAILED:", msg)
+    if failures:
+        raise SystemExit(1)
+    print("CHECKS OK: identical configs hit the plan cache, roundtrip at "
+          "f64 magnitudes, batch launches = ceil(n/V) lane packing")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

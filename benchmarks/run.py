@@ -8,6 +8,7 @@ Sections:
   soft_runtime     measured 1-core runtime (sequential vs clustered)
   kernel_schedule  folded-attention / ragged-DWT grid savings
   dwt_schedules    dense/ragged/onthefly/fused DWT kernels + V batching
+  plan             repro.plan planner: build time, cache hits, executors
   correlation      SO(3) rotational matching: bank + service on fused lanes
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts
@@ -72,7 +73,7 @@ def lm_step(fast=False):
 
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
-            "dwt_schedules", "correlation", "lm_step", "roofline")
+            "dwt_schedules", "plan", "correlation", "lm_step", "roofline")
 
 
 def main() -> None:
@@ -105,6 +106,9 @@ def main() -> None:
         elif name == "dwt_schedules":
             from benchmarks import dwt_schedules
             dwt_schedules.main(fast=args.fast)
+        elif name == "plan":
+            from benchmarks import planner
+            planner.main(fast=args.fast)
         elif name == "correlation":
             from benchmarks import correlation
             correlation.main(fast=args.fast)

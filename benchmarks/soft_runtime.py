@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import plan as plan_mod
 from repro.core import batched, quadrature, soft, wigner
 
 
@@ -62,20 +63,21 @@ def run(bandwidths=(8, 16, 24, 32), fast=False):
         bandwidths = (8, 16)
     rows = []
     for B in bandwidths:
-        plan = batched.build_plan(B, dtype=jnp.float64)
+        t = plan_mod.plan(B, dtype=jnp.float64, impl="reference")
+        plan = t.soft_plan
         fhat = soft.random_coeffs(B, 0)
-        f = np.asarray(batched.inverse_clustered(plan, fhat))
+        f = np.asarray(t.inverse(fhat))
         buf = np.zeros((B, 2 * B, 2 * B), complex)
 
         t_seq = _time(lambda: sequential_forward(plan, buf, f), reps=1)
         fj = jnp.asarray(f)
-        t_clu = _time(lambda: batched.forward_clustered(plan, fj))
+        t_clu = _time(lambda: t.forward(fj))
         d_table = wigner.wigner_d_table(B)
         t_dense = _time(lambda: soft.forward_soft(fj, B, d_table))
 
         # correctness cross-check while we are here
         a = sequential_forward(plan, buf, f)
-        b = np.asarray(batched.forward_clustered(plan, fj))
+        b = np.asarray(t.forward(fj))
         np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-10)
 
         rows.append({"B": B, "sequential_s": t_seq, "clustered_s": t_clu,

@@ -2,10 +2,13 @@
 
     PYTHONPATH=src python examples/quickstart.py [--bandwidth 16]
 
-Walks the public API end to end: build a plan, synthesize a random
-bandlimited function on the Euler grid (iFSOFT), analyze it back (FSOFT),
-verify roundtrip error at paper-Table-1 magnitudes, then swap the DWT stage
-for the Pallas kernel (interpret mode on CPU) and check it agrees.
+Walks the public plan-then-execute API end to end: ``repro.plan(B)``
+resolves the kernel schedule and builds every cached resource ONCE, the
+returned Transform executes many times.  We synthesize a random
+bandlimited function on the Euler grid (iFSOFT), analyze it back
+(FSOFT), verify roundtrip error at paper-Table-1 magnitudes, then plan
+the same transform on the Pallas dense-grid kernel (interpret mode on
+CPU) and check it agrees.
 """
 import argparse
 import sys
@@ -18,9 +21,8 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
-from repro.core import batched, soft
-from repro.kernels import ops
+from repro import plan
+from repro.core import soft
 
 
 def main():
@@ -33,26 +35,35 @@ def main():
     print(f"coefficients: {soft.coeff_count(B)}   "
           f"grid: {2 * B}^3 = {(2 * B) ** 3} samples")
 
+    # one plan call owns schedule + Wigner tables + cluster metadata
     t0 = time.time()
-    plan = batched.build_plan(B, dtype=jnp.float64)
+    t = plan(B, impl="reference")          # pure-jnp executors
     print(f"plan built in {time.time() - t0:.2f}s "
-          f"({plan.n_clusters} symmetry clusters, "
-          f"{plan.table.n_regular} regular kappa-ordered)")
+          f"({t.soft_plan.n_clusters} symmetry clusters, "
+          f"schedule={t.describe()['impl']}, V={t.V})")
 
     fhat = soft.random_coeffs(B, seed=0)
-    f = batched.inverse_clustered(plan, fhat)          # iFSOFT
-    back = batched.forward_clustered(plan, f)          # FSOFT
+    f = t.inverse(fhat)                    # iFSOFT
+    back = t.forward(f)                    # FSOFT
     mask = soft.coeff_mask(B)
     err = np.abs(np.asarray(back) - fhat)[mask].max()
     print(f"roundtrip max abs error: {err:.2e}  (paper Table 1: ~1e-14)")
     assert err < 1e-12
 
-    # same transform, DWT stage on the Pallas kernel (interpret mode on CPU)
-    dwt_fn = ops.make_dwt_fn(plan, "dense", tk=4, tl=min(B, 16), tj=2 * B)
-    back_k = batched.forward_clustered(plan, f, dwt_fn=dwt_fn)
+    # same transform planned onto the Pallas dense-grid kernel
+    # (interpret mode on CPU; `impl="auto"` would pick the fused schedule)
+    tk = plan(B, impl="dense", V=1, tk=4, tl=min(B, 16), tj=2 * B)
+    back_k = tk.forward(f)
     kerr = np.abs(np.asarray(back_k) - np.asarray(back)).max()
     print(f"pallas DWT kernel vs reference: {kerr:.2e}")
     assert kerr < 1e-12
+
+    # the plan is memoized: a second identical call is free
+    t0 = time.time()
+    again = plan(B, impl="dense", V=1, tk=4, tl=min(B, 16), tj=2 * B)
+    assert again is tk
+    print(f"plan cache hit in {time.time() - t0 + 1e-6:.6f}s "
+          f"(same Transform object, same compiled kernels)")
     print("OK")
 
 

@@ -6,8 +6,9 @@
 Thin demo over :mod:`repro.so3`: the correlation theorem turns "find the
 rotation R maximizing <f, Lambda(R) g>" into ONE inverse SO(3) FFT of the
 outer product of coefficient vectors (see repro/so3/__init__.py for the
-math), which :class:`repro.so3.CorrelationEngine` runs through the fused
-V-lane iDWT kernel.  Demo: rotate a random spherical function by a hidden
+math).  ``repro.plan(B)`` resolves the iDWT schedule and lane width, and
+``Transform.correlate`` runs the match through the plan's lane-packed
+inverse executor.  Demo: rotate a random spherical function by a hidden
 (alpha, beta, gamma), match, and recover the rotation to grid resolution
 (pi/B) -- sharper with the engine's quadratic sub-grid refinement.
 """
@@ -21,8 +22,9 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+from repro import plan
 from repro.core import soft
-from repro.so3 import CorrelationEngine, angle_error, s2
+from repro.so3 import angle_error, s2
 from repro.so3.correlate import random_rotation
 
 
@@ -40,21 +42,23 @@ def main():
     g = soft.random_s2_coeffs(B, args.seed)
     f = s2.rotate_s2_coeffs(g, true)
 
-    engine = CorrelationEngine(B)
-    res = engine.match(f, g)
+    t = plan(B)                    # schedule + lane width resolved here
+    res = t.correlate(f, g)
     print(f"recovered:       alpha={res.alpha:.4f} beta={res.beta:.4f} "
           f"gamma={res.gamma:.4f}")
 
     grid_res = np.pi / B
-    errs = [angle_error(e, t) for e, t in zip(res.euler, true)]
+    errs = [angle_error(e, t_) for e, t_ in zip(res.euler, true)]
     print(f"errors: {errs[0]:.4f} {errs[1]:.4f} {errs[2]:.4f} "
           f"(grid resolution ~{grid_res:.4f})")
-    norm = np.sum(np.abs(np.asarray(g)) ** 2)
-    print(f"peak correlation {res.peak:.3f} vs |g|^2 {norm:.3f} "
-          f"(ratio {res.peak / norm:.3f})")
+    print(f"normalized score {res.score:.3f} "
+          f"(peak {res.peak:.3f} / ||f|| ||g||; 1.0 = exact rotation)")
+    engine = t.engine()
     print(f"iFSOFT launches: {engine.stats['launches']} "
-          f"(fused, V={engine.lane_width} lanes)")
+          f"({t.impl} schedule, V={t.V} lanes, "
+          f"{t.describe()['source']}-resolved)")
     assert all(e < 1.5 * grid_res for e in errs), "rotation not recovered!"
+    assert res.score > 0.8, "normalized score should approach 1"
     print("OK: rotation recovered to grid resolution")
 
 

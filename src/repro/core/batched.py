@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from functools import partial
 
 import numpy as np
@@ -188,7 +189,7 @@ def bucket_boundaries_from_lstart(l_start: np.ndarray, n_shards: int,
             continue
         l0 = int(per_shard[:, k0:k1].min())
         out.append((k0, k1, l0))
-    return out
+    return tuple(out)
 
 
 def plan_lstart(plan: SoftPlan) -> np.ndarray:
@@ -199,7 +200,11 @@ def plan_lstart(plan: SoftPlan) -> np.ndarray:
     return l_start
 
 
+@functools.lru_cache(maxsize=32)
 def bucket_boundaries(plan: SoftPlan, n_shards: int, n_buckets: int):
+    """Memoized by (plan, n_shards, n_buckets) identity -- every consumer
+    (make_bucketed_dwt_fn, core.parallel, repro.plan) shares one slice
+    table per plan instead of recomputing it per call."""
     return bucket_boundaries_from_lstart(plan_lstart(plan), n_shards,
                                          n_buckets)
 

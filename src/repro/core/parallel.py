@@ -25,6 +25,7 @@ The Wigner table d[k, l, j] is sharded over clusters, so the B = 512 table
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 
 import numpy as np
@@ -38,8 +39,9 @@ from .batched import SoftPlan, fft_analysis, fft_synthesis
 
 __all__ = [
     "check_mesh_compat", "distributed_forward", "distributed_inverse",
-    "LocalDWT", "make_bucketed_local_dwt", "make_fused_local_dwt",
-    "make_fused_local_idwt", "packed_to_dense", "dense_to_packed",
+    "LocalDWT", "ShardMeta", "fused_shard_meta", "make_bucketed_local_dwt",
+    "make_fused_local_dwt", "make_fused_local_idwt", "packed_to_dense",
+    "dense_to_packed",
 ]
 
 
@@ -120,9 +122,31 @@ def make_bucketed_local_dwt(slices, B):
     return fn
 
 
-def _fused_local_inputs(plan: SoftPlan, n_shards: int, tk: int):
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardMeta:
+    """Shard metadata of one (plan, n_shards) pairing, computed ONCE and
+    shared by the forward and inverse distributed paths: recurrence
+    seeds/orders (replacing the d-table shard) and the per-local-tile l0
+    schedule valid for every shard simultaneously."""
+
+    n_shards: int
+    tk: int
+    seeds: jnp.ndarray      # (Kp, J)
+    m: jnp.ndarray          # (Kp,)
+    mp: jnp.ndarray         # (Kp,)
+    cb: jnp.ndarray         # (J,)   cos(beta), replicated
+    l0s: np.ndarray         # (kloc // tk,) int32, replicated
+
+
+@functools.lru_cache(maxsize=16)
+def fused_shard_meta(plan: SoftPlan, n_shards: int,
+                     tk: int | None = None) -> ShardMeta:
     """Seeds/orders plus per-local-tile l0s valid for EVERY shard (min over
-    shards at each local offset, cf. bucket_boundaries_from_lstart)."""
+    shards at each local offset, cf. bucket_boundaries_from_lstart).
+
+    Memoized by (plan, n_shards, tk) identity -- plans themselves are
+    memoized by build_plan, so a planner (repro.plan) and both transform
+    directions read ONE metadata build instead of recomputing per call."""
     from repro.kernels import ops as kops  # deferred: kernels import core
 
     from .batched import plan_lstart
@@ -136,41 +160,45 @@ def _fused_local_inputs(plan: SoftPlan, n_shards: int, tk: int):
     seeds, m, mp, cb = kops.onthefly_inputs(plan)
     per_shard = plan_lstart(plan).reshape(n_shards, kloc)
     l0s = per_shard.reshape(n_shards, kloc // tk, tk).min(axis=(0, 2))
-    return seeds, m, mp, cb, np.asarray(l0s, np.int32), tk
+    return ShardMeta(n_shards=n_shards, tk=tk, seeds=seeds, m=m, mp=mp,
+                     cb=cb, l0s=np.asarray(l0s, np.int32))
 
 
 def make_fused_local_dwt(plan: SoftPlan, n_shards: int, *, tk=None,
-                         interpret=None):
+                         interpret=None, meta: ShardMeta | None = None):
     """LocalDWT running the fused ragged+on-the-fly kernel per device: no
     d-table shard, zero-triangle skipped via the replicated l0s schedule.
     Build the plan with order=shard_balanced_order(...) so every shard's
     local block is extent-sorted (correct for any order; sorted orders
-    maximize the skipped rows)."""
+    maximize the skipped rows).  `meta` accepts a precomputed
+    :func:`fused_shard_meta` (e.g. from a repro.plan Transform)."""
     from repro.kernels import dwt_fused as dfk
 
-    seeds, m, mp, cb, l0s, tk = _fused_local_inputs(plan, n_shards, tk)
+    meta = fused_shard_meta(plan, n_shards, tk) if meta is None else meta
+    l0s, mtk = meta.l0s, meta.tk
 
     def fn(seeds_loc, m_loc, mp_loc, cb_rep, rhs2):
         return dfk.dwt_fused(seeds_loc, m_loc, mp_loc, cb_rep, rhs2, l0s,
-                             B=plan.B, tk=tk, interpret=interpret)
+                             B=plan.B, tk=mtk, interpret=interpret)
 
-    return LocalDWT((seeds, m, mp, cb), (True, True, True, False), fn,
-                    needs_norep=True)
+    return LocalDWT((meta.seeds, meta.m, meta.mp, meta.cb),
+                    (True, True, True, False), fn, needs_norep=True)
 
 
 def make_fused_local_idwt(plan: SoftPlan, n_shards: int, *, tk=None,
-                          interpret=None):
+                          interpret=None, meta: ShardMeta | None = None):
     """Inverse-path twin of make_fused_local_dwt (no d-table shard)."""
     from repro.kernels import dwt_fused as dfk
 
-    seeds, m, mp, cb, l0s, tk = _fused_local_inputs(plan, n_shards, tk)
+    meta = fused_shard_meta(plan, n_shards, tk) if meta is None else meta
+    l0s, mtk = meta.l0s, meta.tk
 
     def fn(seeds_loc, m_loc, mp_loc, cb_rep, lhs2):
         return dfk.idwt_fused(seeds_loc, m_loc, mp_loc, cb_rep, lhs2, l0s,
-                              B=plan.B, tk=tk, interpret=interpret)
+                              B=plan.B, tk=mtk, interpret=interpret)
 
-    return LocalDWT((seeds, m, mp, cb), (True, True, True, False), fn,
-                    needs_norep=True)
+    return LocalDWT((meta.seeds, meta.m, meta.mp, meta.cb),
+                    (True, True, True, False), fn, needs_norep=True)
 
 
 # ---------------------------------------------------------------------------

@@ -11,8 +11,18 @@
   runtime.py           default_interpret() shared by every wrapper
   ref.py               pure-jnp oracles
 
-Schedule selection (make_dwt_fn impl=...)
------------------------------------------
+Which schedule when -- plan it, don't pick it
+---------------------------------------------
+
+Schedule choice is a PLANNER decision: ``repro.plan(B, impl="auto",
+V="auto")`` resolves impl, lane width V, and tiles through this
+package's autotuner (statically via the VMEM-guard estimator, or the
+measured on-disk-cached sweep under ``tune="measure"`` /
+``$REPRO_PLAN_TUNE=measure``), then owns the resulting kernel closures
+for every executor (single, V-lane batch, sharded).  ``make_dwt_fn`` /
+``make_idwt_fn`` below stay as the kernel-level binding the planner
+(and kernel tests/benchmarks) build on.  What the planner is choosing
+between (``impl=...`` forces one):
 
   dense     Simplest; pads every cluster to the full l-range and streams
             the whole d-table from HBM.  Only competitive at tiny B or
@@ -21,28 +31,35 @@ Schedule selection (make_dwt_fn impl=...)
             (~2.4x fewer MXU blocks at B = 512) but still reads the
             visited d-blocks from HBM.  Best when VMEM is too tight for
             the recurrence state or d is cheap to keep (small B, many
-            reuses per table build).
+            reuses per table build).  (Forward only -- planned inverses
+            fall back to the dense grid.)
   onthefly  No d-table anywhere (seeds + three-term recurrence in VMEM);
             HBM traffic drops by ~L/2 vs dense.  Executes the full l-range
             per cluster, so it pays the zero-triangle in compute.  Best
             at large B when clusters are unsorted.
   fused     onthefly + the ragged skip: host-sorted clusters, per-tile
             scalar-prefetch l0, recurrence starts at l0.  Strictly fewer
-            row-steps than onthefly AND no d-table term -- the default
-            choice for B >= 32.  batch=V packs V transforms onto the lane
-            axis (C2 = V*C*2): one launch, each generated d-row reused V
-            times (core.batched.forward_clustered_batch).
+            row-steps than onthefly AND no d-table term -- what
+            impl="auto" resolves to (statically) for every B.  batch=V
+            packs V transforms onto the lane axis (C2 = V*C*2): one
+            launch, each generated d-row reused V times
+            (Transform.forward_batch / inverse_batch).
+  reference Planner-only pseudo-schedule: the pure-jnp einsum path
+            (differentiable, runs anywhere) -- the correctness oracle.
 
 VMEM budgets (f32, TK = 8): dense/ragged hold a (TK, TL, TJ) d-block
 (2 MB at 8x128x512) + rhs + out; the recurrence schedules hold seeds +
 2 state rows (3*TK*J) + rhs (TK*J*C2) + out (TK*L*C2) -- ~1 MB at B = 512
 V = 1, leaving lane-batching headroom to V ~ 16 under the ~16 MB ceiling.
+``V="auto"`` picks the widest lane packing whose estimate fits
+$REPRO_VMEM_BYTES (autotune.vmem_limit_bytes).
 
 Tile choice is measured, not guessed: kernels/autotune.py sweeps the
 divisor-constrained candidates per (B, dtype, backend, impl, V) and
 memoizes winners in $REPRO_AUTOTUNE_CACHE (default
 ~/.cache/repro/autotune.json); benchmarks/dwt_schedules.py prints the
-block/HBM accounting behind the guidance above.
+block/HBM accounting behind the guidance above, and benchmarks/planner.py
+smokes the plan build/cache/executor path.
 """
 from . import (autotune, dwt, dwt_fused, folded_attention, ops, ref,  # noqa: F401
                runtime, wigner_rec)

@@ -14,6 +14,7 @@ suite exercises the real kernel bodies.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import numpy as np
@@ -87,10 +88,14 @@ def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):
     return perm, l_start, kk, ll, n_dense
 
 
+@functools.lru_cache(maxsize=16)
 def fused_metadata(plan: SoftPlan, tk: int):
     """Host-side ragged metadata for the fused kernel: sort clusters by
     ascending l-start (padded rows last, at B-1 -- their Wigner rows are
-    identically zero) and reduce each TK-tile to its scalar-prefetch l0."""
+    identically zero) and reduce each TK-tile to its scalar-prefetch l0.
+
+    Memoized by (plan, tk) identity: a planner building forward + inverse
+    + batched variants of one schedule reads one metadata build."""
     from repro.core.batched import plan_lstart
 
     l_start = plan_lstart(plan)
@@ -227,10 +232,14 @@ def batched_rhs(plan: SoftPlan, S):
     return pack_lanes(rhs)
 
 
+@functools.lru_cache(maxsize=16)
 def onthefly_inputs(plan: SoftPlan):
     """Seeds/orders/cos(beta) for the fused-recurrence kernels.
 
-    Padded clusters get zero seeds -> identically zero Wigner rows."""
+    Padded clusters get zero seeds -> identically zero Wigner rows.
+    Memoized by plan identity (plans are memoized by build_plan), so the
+    seed-table build -- one wigner_seed per cluster -- runs once per plan
+    across forward/inverse/batched/sharded consumers."""
     B = plan.B
     beta = quadrature.betas(B)
     K = plan.n_padded

@@ -24,7 +24,10 @@ def main(argv=None):
     ap.add_argument("--bandwidth", type=int, nargs="+", default=[8],
                     help="bandwidth(s) served; requests cycle through them")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--lane-width", type=int, default=4)
+    ap.add_argument("--lane-width", type=int, default=0,
+                    help="packing width V; 0 (default) takes V per "
+                         "bandwidth from the plan's autotune/VMEM-guard "
+                         "resolution (repro.plan)")
     ap.add_argument("--tk", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -41,13 +44,16 @@ def main(argv=None):
     from repro.so3 import SO3Service, angle_error, s2
     from repro.so3.correlate import random_rotation
 
+    lane_width = args.lane_width if args.lane_width > 0 else None
     svc = SO3Service(bandwidths=args.bandwidth, dtype=jnp.float64,
-                     lane_width=args.lane_width, tk=args.tk,
+                     lane_width=lane_width, tk=args.tk,
                      max_wait_ms=args.max_wait_ms)
     warm = svc.warmup()
     for B, s in warm.items():
+        eng = svc.engine(B)
         print(f"warmup B={B}: {s:.2f}s (plan + Wigner seeds + fused kernel "
-              f"compile, V={args.lane_width})")
+              f"compile, V={eng.lane_width} "
+              f"[{eng.transform.describe()['source']}])")
 
     rng = np.random.default_rng(args.seed)
     jobs = []

@@ -1,0 +1,32 @@
+"""``repro.plan`` -- the plan-then-execute entry point of the framework.
+
+The module itself is callable (FFTW-style):
+
+    from repro import plan
+    t = plan(16)                  # resolve schedule, build resources
+    fhat = t.forward(f)           # execute many times
+
+See :mod:`repro.plan.transform` for the full design notes.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+from .transform import (AUTO_IMPL_CANDIDATES, AUTO_V_CANDIDATES,  # noqa: F401
+                        IMPLS, Schedule, Transform, cache_stats,
+                        clear_cache, plan)
+
+__all__ = ["plan", "Transform", "Schedule", "clear_cache", "cache_stats",
+           "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
+
+
+class _CallableModule(types.ModuleType):
+    """Lets ``repro.plan(B, ...)`` build a Transform directly while the
+    module keeps exposing Transform/Schedule/etc. as attributes."""
+
+    def __call__(self, *args, **kwargs):
+        return plan(*args, **kwargs)
+
+
+sys.modules[__name__].__class__ = _CallableModule

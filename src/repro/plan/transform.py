@@ -1,0 +1,502 @@
+"""Planner/executor layer: one :class:`Transform` owns schedule, tuning,
+lanes, and sharding for the whole stack.
+
+The paper's PCAM design separates *planning* (symmetry-folded index
+ranges, work-package partitioning) from *execution*; FFTW and P3DFFT
+("a framework around a tuned transform") ship the same split as a
+plan-then-execute API.  Before this module every layer re-derived its
+own plan -- ``ops.make_dwt_fn``, ``core.batched.forward_clustered*``,
+``core.parallel.distributed_*``, ``kernels.autotune`` and
+``so3.CorrelationEngine`` each picked impl/tile/V/sharding and rebuilt
+caches independently.  Now the decision is made ONCE:
+
+    from repro import plan
+    t = plan(B, impl="auto", V="auto")     # resolve + materialize
+    fhat = t.forward(f)                    # local / sharded routed here
+    grids = t.inverse_batch(fhats)         # V-lane packed launches
+    res = t.correlate(f_s2, g_s2)          # application executor
+
+A ``Transform`` resolves the kernel schedule (dense / ragged / onthefly
+/ fused / pure-jnp reference) through :mod:`repro.kernels.autotune` --
+statically via the VMEM-guard estimator by default, or with the
+measured on-disk-cached sweep under ``tune="measure"`` (or
+``$REPRO_PLAN_TUNE=measure``) -- then materializes and owns every
+cached resource: the :class:`~repro.core.batched.SoftPlan` (Wigner
+table + cluster metadata), the single and V-lane-batched kernel
+closures, and (for mesh plans) the shard metadata consumed by
+:mod:`repro.core.parallel`.  Downstream layers (``core.batched``,
+``core.parallel``, ``repro.so3``) are engines behind the plan; they
+remain importable for kernel-level work and as deprecation shims.
+
+Plans are memoized: ``plan(...)`` with an identical configuration
+returns the SAME ``Transform`` object (see :func:`cache_stats`), so a
+serving loop, a benchmark sweep, and a correlation engine at one
+bandwidth all share one set of compiled resources.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import batched, clusters as clusters_mod, parallel
+from repro.core.batched import SoftPlan
+from repro.kernels import autotune, ops
+
+__all__ = ["Transform", "Schedule", "plan", "clear_cache", "cache_stats",
+           "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
+
+# impl="auto" resolves to one of these executor schedules
+IMPLS = ("reference", "dense", "ragged", "onthefly", "fused")
+# measured auto-selection sweeps the recurrence schedules (cheap candidate
+# sets; dense/ragged stay available by explicit request)
+AUTO_IMPL_CANDIDATES = ("fused", "onthefly")
+AUTO_V_CANDIDATES = (1, 2, 4, 8)
+
+_DEF_TK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Resolved execution schedule of one Transform.
+
+    ``source`` records how it was picked: "explicit" (caller fixed impl,
+    V and tiles), "static" (VMEM-guard estimator), or "measured"
+    (:func:`repro.kernels.autotune.autotune_dwt` sweep, on-disk cached).
+    """
+
+    impl: str               # executor schedule (one of IMPLS)
+    V: int                  # lane width of the batch executors
+    tk: int
+    tl: int
+    tj: int
+    source: str             # "explicit" | "static" | "measured"
+    vmem_bytes: int         # static per-grid-step footprint estimate
+    vmem_limit: int         # budget the schedule was resolved under
+    per_transform_s: float | None = None   # measured (tune="measure") only
+
+    @property
+    def inverse_impl(self) -> str:
+        """iDWT twin: the ragged grid has no inverse kernel; its plans
+        run the inverse on the dense grid with the same tiles."""
+        return "dense" if self.impl == "ragged" else self.impl
+
+
+def _tune_mode(tune) -> str:
+    if tune is None:
+        tune = os.environ.get("REPRO_PLAN_TUNE", "static")
+    if tune not in ("static", "measure"):
+        raise ValueError(f"tune must be 'static' or 'measure', got {tune!r}")
+    return tune
+
+
+def _default_tk(K: int) -> int:
+    return max(t for t in (1, 2, 4, _DEF_TK) if K % t == 0)
+
+
+def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
+                     limit: int) -> Schedule:
+    """Largest lane width under the VMEM guard, default tiles."""
+    K, L, J = soft_plan.d.shape
+    C = soft_plan.gather_m.shape[1]
+    itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
+    impl = "fused" if impl == "auto" else impl
+    tk = _default_tk(K) if tk is None else tk
+    tl = L if tl is None else tl
+    tj = J if tj is None else tj
+    if impl == "reference":     # pure jnp: no kernel, no VMEM constraint
+        source = "static" if V == "auto" else "explicit"
+        V = 4 if V == "auto" else V
+        return Schedule(impl, V, tk, tl, tj, source, 0, limit)
+
+    def est(v):
+        return autotune.estimate_vmem_bytes(impl, L=L, J=J, C2=v * C * 2,
+                                            tk=tk, tl=tl, tj=tj,
+                                            itemsize=itemsize)
+
+    if V == "auto":
+        fits = [v for v in AUTO_V_CANDIDATES if est(v) <= limit]
+        if not fits:
+            raise ValueError(
+                f"no lane width fits the {limit}-byte VMEM budget for "
+                f"impl={impl} at B={soft_plan.B} (min estimate {est(1)}; "
+                f"raise $REPRO_VMEM_BYTES or vmem_budget)")
+        V = max(fits)
+        source = "static"
+    else:
+        source = "explicit"
+        if est(V) > limit:
+            raise ValueError(
+                f"explicit schedule impl={impl} V={V} tk={tk} needs "
+                f"{est(V)} bytes of VMEM per grid step, over the {limit} "
+                f"budget (raise $REPRO_VMEM_BYTES or vmem_budget)")
+    return Schedule(impl, V, tk, tl, tj, source, est(V), limit)
+
+
+def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
+                       reps: int, cache) -> Schedule:
+    """Resolve via the measured autotune sweep (disk-cached winners)."""
+    impls = AUTO_IMPL_CANDIDATES if impl == "auto" else (impl,)
+    Vs = AUTO_V_CANDIDATES if V == "auto" else (V,)
+    best, best_impl = None, None
+    for im in impls:
+        cfg = autotune.autotune_dwt(soft_plan, im, Vs=Vs, reps=reps,
+                                    interpret=interpret, vmem_limit=limit,
+                                    cache=cache)
+        if best is None or cfg["per_transform_s"] < best["per_transform_s"]:
+            best, best_impl = cfg, im
+    K, L, J = soft_plan.d.shape
+    C = soft_plan.gather_m.shape[1]
+    est = autotune.estimate_vmem_bytes(
+        best_impl, L=L, J=J, C2=best["V"] * C * 2, tk=best["tk"],
+        tl=best["tl"], tj=best["tj"],
+        itemsize=jnp.dtype(soft_plan.d.dtype).itemsize)
+    return Schedule(best_impl, best["V"], best["tk"], best["tl"], best["tj"],
+                    "measured", est, limit,
+                    per_transform_s=best["per_transform_s"])
+
+
+class Transform:
+    """One planned SO(3) FFT configuration: schedule + owned resources +
+    executors.
+
+    Build via :func:`repro.plan.plan` (or just ``repro.plan(...)``) --
+    the constructor is internal.  Executors:
+
+      forward / inverse              single transform, dense coefficient
+                                     layout in/out; sharded over
+                                     ``mesh`` when one was planned
+      forward_batch / inverse_batch  any request count, chunked onto the
+                                     V-lane fused launches (partial
+                                     chunks zero-padded: one compiled
+                                     kernel shape)
+      s2_forward / s2_inverse        spherical-harmonic stage 0
+      correlate / engine()           rotational matching on this plan
+
+    ``stats`` counts launches / packed transforms / padded lanes; the
+    batch executors accept an external ``stats`` sink so per-client
+    accounting (e.g. a CorrelationEngine) composes with the shared
+    cached Transform.
+    """
+
+    def __init__(self, *, soft_plan: SoftPlan, schedule: Schedule,
+                 mesh=None, axis=None, n_shards: int = 1, n_buckets: int = 8,
+                 interpret=None):
+        self.soft_plan = soft_plan
+        self.schedule = schedule
+        self.B = soft_plan.B
+        self.dtype = soft_plan.d.dtype
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = n_shards
+        self.n_buckets = n_buckets
+        self.interpret = interpret
+        self.reset_stats()
+        self._resources: dict = {}
+
+    # -- schedule forwarding --------------------------------------------
+
+    @property
+    def impl(self) -> str:
+        return self.schedule.impl
+
+    @property
+    def V(self) -> int:
+        return self.schedule.V
+
+    @property
+    def cdtype(self):
+        return (jnp.complex64 if jnp.dtype(self.dtype) == jnp.float32
+                else jnp.complex128)
+
+    def reset_stats(self) -> None:
+        self.stats = dict(launches=0, transforms=0, padded_lanes=0)
+
+    def describe(self) -> dict:
+        """One flat dict for logs / benchmark rows."""
+        s = self.schedule
+        return {
+            "B": self.B, "dtype": jnp.dtype(self.dtype).name,
+            "impl": s.impl, "V": s.V, "tk": s.tk, "tl": s.tl, "tj": s.tj,
+            "source": s.source, "vmem_bytes": s.vmem_bytes,
+            "vmem_limit": s.vmem_limit, "n_shards": self.n_shards,
+            "n_clusters": self.soft_plan.n_clusters,
+            "n_padded": self.soft_plan.n_padded,
+        }
+
+    # -- owned resources (built once, cached on the Transform) ----------
+
+    def _res(self, name, build):
+        if name not in self._resources:
+            self._resources[name] = build()
+        return self._resources[name]
+
+    @property
+    def dwt_fn(self):
+        """Single-transform (plan, rhs) DWT closure; None = jnp path."""
+        return self._res("dwt_1", lambda: self._make(ops.make_dwt_fn,
+                                                     self.schedule.impl, None))
+
+    @property
+    def idwt_fn(self):
+        return self._res("idwt_1", lambda: self._make(
+            ops.make_idwt_fn, self.schedule.inverse_impl, None))
+
+    @property
+    def dwt_fn_batch(self):
+        """V-lane batch DWT closure ((V, K, J, C, 2) rhs, one launch)."""
+        return self._res("dwt_V", lambda: self._make(
+            ops.make_dwt_fn, self.schedule.impl, self.schedule.V))
+
+    @property
+    def idwt_fn_batch(self):
+        return self._res("idwt_V", lambda: self._make(
+            ops.make_idwt_fn, self.schedule.inverse_impl, self.schedule.V))
+
+    def _make(self, maker, impl, batch):
+        if self.schedule.impl == "reference":
+            return None
+        s = self.schedule
+        return maker(self.soft_plan, impl, tk=s.tk, tl=s.tl, tj=s.tj,
+                     interpret=self.interpret, batch=batch)
+
+    def shard_meta(self):
+        """Fused-kernel shard metadata (seeds / orders / per-tile l0s),
+        computed once per plan and shared by the forward and inverse
+        distributed paths (and by :mod:`repro.core.parallel` itself).
+
+        The local cluster-tile follows the resolved schedule.tk (so the
+        sharded launch never exceeds the footprint the VMEM guard
+        approved), shrunk to the largest divisor of the local cluster
+        count when the global tile does not divide it."""
+        if self.mesh is None:
+            raise ValueError("shard_meta() on a plan built without a mesh")
+        kloc = self.soft_plan.n_padded // self.n_shards
+        tk = max(t for t in range(1, min(self.schedule.tk, kloc) + 1)
+                 if kloc % t == 0)
+        return self._res("shard_meta", lambda: parallel.fused_shard_meta(
+            self.soft_plan, self.n_shards, tk))
+
+    def _local_dwt(self):
+        def build():
+            impl = self.schedule.impl
+            if impl in ("fused", "onthefly"):
+                return parallel.make_fused_local_dwt(
+                    self.soft_plan, self.n_shards, interpret=self.interpret,
+                    meta=self.shard_meta())
+            if impl in ("dense", "ragged"):
+                slices = batched.bucket_boundaries(
+                    self.soft_plan, self.n_shards, self.n_buckets)
+                return parallel.make_bucketed_local_dwt(slices, self.B)
+            return None          # reference: plain einsum in the body
+        return self._res("local_dwt", build)
+
+    def _local_idwt(self):
+        def build():
+            if self.schedule.impl in ("fused", "onthefly"):
+                return parallel.make_fused_local_idwt(
+                    self.soft_plan, self.n_shards, interpret=self.interpret,
+                    meta=self.shard_meta())
+            return None          # dense einsum (no bucketed inverse kernel)
+        return self._res("local_idwt", build)
+
+    # -- executors: single transform ------------------------------------
+
+    def forward(self, f, *, stats=None):
+        """FSOFT: samples (2B, 2B, 2B) -> dense coefficients
+        (B, 2B-1, 2B-1).  Routes to the sharded path when the plan holds
+        a mesh."""
+        stats = self.stats if stats is None else stats
+        stats["launches"] += 1
+        stats["transforms"] += 1
+        return self._forward_impl(jnp.asarray(f))
+
+    def _forward_impl(self, f):
+        if self.mesh is not None:
+            packed = parallel.distributed_forward(
+                self.soft_plan, f, self.mesh, self.axis,
+                local_dwt=self._local_dwt())
+            return parallel.packed_to_dense(self.soft_plan, packed)
+        return batched.forward_clustered(self.soft_plan, f,
+                                         dwt_fn=self.dwt_fn)
+
+    def inverse(self, fhat, *, stats=None):
+        """iFSOFT: dense coefficients -> samples (2B, 2B, 2B)."""
+        stats = self.stats if stats is None else stats
+        stats["launches"] += 1
+        stats["transforms"] += 1
+        return self._inverse_impl(jnp.asarray(fhat))
+
+    def _inverse_impl(self, fhat):
+        if self.mesh is not None:
+            packed = parallel.dense_to_packed(self.soft_plan, fhat)
+            return parallel.distributed_inverse(
+                self.soft_plan, packed, self.mesh, self.axis,
+                local_idwt=self._local_idwt())
+        return batched.inverse_clustered(self.soft_plan, fhat,
+                                         idwt_fn=self.idwt_fn)
+
+    # -- executors: V-lane batches --------------------------------------
+
+    def forward_batch(self, fs, *, stats=None):
+        """FSOFT of any request count: (n, 2B, 2B, 2B) -> (n, B, 2B-1,
+        2B-1).  Chunks of V ride one lane-packed kernel launch; the final
+        partial chunk is zero-padded so every launch reuses the single
+        compiled kernel shape."""
+        return self._batch(fs, batched.forward_clustered_batch,
+                           lambda: self.dwt_fn_batch, "dwt_fn",
+                           out_shape=(self.B, 2 * self.B - 1, 2 * self.B - 1),
+                           stats=stats)
+
+    def inverse_batch(self, fhats, *, stats=None):
+        """iFSOFT of any request count: (n, B, 2B-1, 2B-1) -> (n, 2B,
+        2B, 2B); see :meth:`forward_batch`."""
+        return self._batch(fhats, batched.inverse_clustered_batch,
+                           lambda: self.idwt_fn_batch, "idwt_fn",
+                           out_shape=(2 * self.B,) * 3, stats=stats)
+
+    def _batch(self, xs, engine, get_fn, fn_kw, out_shape, stats):
+        stats = self.stats if stats is None else stats
+        xs = jnp.asarray(xs)
+        n_total = xs.shape[0]
+        if n_total == 0:
+            return jnp.zeros((0,) + out_shape, self.cdtype)
+        if self.mesh is not None:     # sharded plans serve batches serially
+            impl = (self._forward_impl if fn_kw == "dwt_fn"
+                    else self._inverse_impl)
+            stats["launches"] += n_total
+            stats["transforms"] += n_total
+            return jnp.stack([impl(x) for x in xs])
+        V = self.schedule.V
+        fn = get_fn()
+        outs = []
+        for n0 in range(0, n_total, V):
+            chunk, n = ops.pad_lanes(xs[n0: n0 + V], V)
+            out = engine(self.soft_plan, chunk, **{fn_kw: fn})
+            stats["launches"] += 1
+            stats["transforms"] += n
+            stats["padded_lanes"] += V - n
+            outs.append(out[:n])      # stay on device: no per-chunk sync
+        return jnp.concatenate(outs, axis=0)
+
+    # -- executors: S^2 stage and correlation ---------------------------
+
+    def s2_forward(self, samples):
+        """S^2 analysis: samples (2B, 2B) -> coefficients (B, 2B-1)."""
+        from repro.so3 import s2
+        return s2.s2_analysis(samples, self.B)
+
+    def s2_inverse(self, flm):
+        """S^2 synthesis: coefficients (B, 2B-1) -> samples (2B, 2B)."""
+        from repro.so3 import s2
+        return s2.s2_synthesis(flm)
+
+    def engine(self):
+        """The rotational-matching engine bound to this plan (cached)."""
+        from repro.so3.correlate import CorrelationEngine
+        return self._res("engine", lambda: CorrelationEngine(transform=self))
+
+    def correlate(self, f, g, *, refine: bool = True):
+        """Rotation maximizing <f, Lambda(R) g> for one S^2 pair."""
+        return self.engine().match(f, g, refine=refine)
+
+
+# ---------------------------------------------------------------------------
+# the planner entry point + plan cache
+# ---------------------------------------------------------------------------
+
+_CACHE: collections.OrderedDict = collections.OrderedDict()
+_CACHE_MAX = 16
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_cache() -> None:
+    """Drop memoized Transforms (testing / benchmarking hook)."""
+    _CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def cache_stats() -> dict:
+    return dict(_CACHE_STATS, size=len(_CACHE))
+
+
+def _mesh_key(mesh):
+    if mesh is None:
+        return None
+    try:
+        return hash(mesh)
+    except TypeError:
+        return id(mesh)
+
+
+def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
+         tk: int | None = None, tl: int | None = None, tj: int | None = None,
+         mesh=None, axis=("data", "model"), tune: str | None = None,
+         vmem_budget: int | None = None, interpret=None, n_buckets: int = 8,
+         tune_reps: int = 3, tune_cache=None) -> Transform:
+    """Plan one SO(3) FFT configuration; returns a memoized Transform.
+
+    impl: "auto" | "reference" | "dense" | "ragged" | "onthefly" | "fused".
+    V:    "auto" or an explicit lane width for the batch executors.
+    tune: "static" (default; VMEM-guard estimator picks the widest lane
+          packing that fits) or "measure" (kernels.autotune measured
+          sweep, winners cached on disk).  $REPRO_PLAN_TUNE overrides
+          the default.
+    mesh/axis: plan the sharded executors -- the cluster axis is padded
+          and shard-balance-ordered, and forward/inverse route through
+          core.parallel with the plan's shard metadata.
+    vmem_budget: per-grid-step ceiling in bytes (default
+          kernels.autotune.vmem_limit_bytes(), i.e. $REPRO_VMEM_BYTES).
+
+    Identical configurations return the SAME Transform object, so every
+    consumer of one configuration shares one SoftPlan, one Wigner table,
+    and one set of compiled kernels.
+    """
+    if impl != "auto" and impl not in IMPLS:
+        raise ValueError(f"impl must be 'auto' or one of {IMPLS}, "
+                         f"got {impl!r}")
+    if V != "auto" and (not isinstance(V, int) or V < 1):
+        raise ValueError(f"V must be 'auto' or a positive int, got {V!r}")
+    mode = _tune_mode(tune)
+    limit = autotune.vmem_limit_bytes() if vmem_budget is None \
+        else int(vmem_budget)
+    axis = (axis,) if isinstance(axis, str) else tuple(axis)
+    key = (B, jnp.dtype(dtype).str, impl, V, tk, tl, tj, _mesh_key(mesh),
+           axis if mesh is not None else None, mode, limit, interpret,
+           n_buckets, None if tune_cache is None else str(tune_cache))
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["hits"] += 1
+        _CACHE.move_to_end(key)
+        return hit
+    _CACHE_STATS["misses"] += 1
+
+    base_tk = tk if tk is not None else _DEF_TK
+    if mesh is not None:
+        n_shards = int(np.prod([mesh.shape[a] for a in axis]))
+        order = batched.shard_balanced_order(
+            clusters_mod.build_cluster_table(B).rep[:, 0], n_shards)
+        soft_plan = batched.build_plan(B, dtype=dtype,
+                                       pad_to=base_tk * n_shards, order=order)
+        parallel.check_mesh_compat(soft_plan, n_shards)
+    else:
+        n_shards = 1
+        soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk)
+
+    if mode == "measure" and impl != "reference" \
+            and tk is None and tl is None and tj is None:
+        schedule = _measured_schedule(soft_plan, impl, V, limit, interpret,
+                                      tune_reps, tune_cache)
+    else:
+        schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit)
+
+    t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
+                  axis=axis if mesh is not None else None,
+                  n_shards=n_shards, n_buckets=n_buckets, interpret=interpret)
+    _CACHE[key] = t
+    while len(_CACHE) > _CACHE_MAX:
+        _CACHE.popitem(last=False)
+    return t

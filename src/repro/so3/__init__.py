@@ -32,16 +32,20 @@ Layers
                               Legendre), so raw S^2 samples enter the
                               pipeline without precomputed coefficients.
   :mod:`repro.so3.correlate`  :class:`CorrelationEngine` -- outer-product
-                              coefficient batches through
-                              ``core.batched.inverse_clustered_batch``
-                              with a fused V-lane iDWT
-                              (``ops.make_idwt_fn(impl="fused",
-                              batch=V)``); pair / one-vs-bank /
-                              many-vs-many entry points + peak refinement.
+                              coefficient batches through a
+                              :class:`repro.plan.Transform`'s lane-packed
+                              ``inverse_batch`` executor (the plan
+                              resolves the iDWT schedule and lane width
+                              V); pair / one-vs-bank / many-vs-many entry
+                              points, peak refinement, and normalized
+                              cross-correlation scores.  Build from a
+                              plan: ``repro.plan(B).engine()``.
   :mod:`repro.so3.service`    :class:`SO3Service` -- micro-batching queue
                               that packs same-bandwidth requests into the
-                              V lanes, warms plan/kernel caches at
-                              startup, and reports latency/throughput.
+                              V lanes (``lane_width=None`` takes V from
+                              each bandwidth's plan), warms plan/kernel
+                              caches at startup, and reports
+                              latency/throughput.
                               CLI: ``python -m repro.launch.serve_so3``.
 
 Latency/throughput note

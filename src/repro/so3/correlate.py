@@ -8,10 +8,11 @@ f, g bandlimited on S^2 with coefficient vectors f_l, g_l,
 
 so ALL (2B)^3 grid correlations are ONE inverse SO(3) FFT of the
 outer-product coefficient array T[l, m, m'] = conj(f[l, m]) g[l, m'].
-The engine below evaluates batches of such T through
-``core.batched.inverse_clustered_batch`` with a fused V-lane iDWT
-(``ops.make_idwt_fn(impl="fused", batch=V)``): V correlation problems ride
-one kernel launch, each on-the-fly Wigner row reused V times.
+The engine below evaluates batches of such T through a
+:class:`repro.plan.Transform`'s lane-packed ``inverse_batch`` executor:
+the plan resolves the iDWT schedule and the lane width V (autotuned /
+VMEM-guarded by ``repro.plan``), and V correlation problems ride one
+kernel launch, each on-the-fly Wigner row reused V times.
 
 Request shapes served:
 
@@ -21,9 +22,15 @@ Request shapes served:
 
 Inputs can be S^2 coefficient vectors (B, 2B-1) or raw grid samples
 (2B, 2B) -- samples enter through :func:`repro.so3.s2.s2_analysis`.
-Batches are zero-padded to the engine's lane width (one compiled kernel
+Batches are zero-padded to the plan's lane width (one compiled kernel
 shape, predictable latency); ``stats`` tracks launches, lane occupancy,
 and padding waste.
+
+Every :class:`MatchResult` carries both the raw correlation ``peak`` and
+the normalized cross-correlation ``score`` = peak / (||f|| ||g||) (the
+coefficient 2-norms).  By Cauchy-Schwarz the score lies in [-1, 1] with
+1 iff f is exactly a rotation of g -- one-vs-bank ranking uses it so
+peaks stay comparable across templates of different power.
 """
 from __future__ import annotations
 
@@ -32,8 +39,7 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import batched, quadrature, soft
-from repro.kernels import ops
+from repro.core import quadrature, soft
 
 from . import s2
 
@@ -63,17 +69,26 @@ def random_rotation(seed_or_rng=0, beta_margin: float = 0.2):
 @dataclasses.dataclass(frozen=True)
 class MatchResult:
     """One recovered rotation: Euler angles (ZYZ, repo convention), the
-    correlation peak value, and the raw grid argmax."""
+    raw correlation peak, the grid argmax, and the normalized
+    cross-correlation score (peak / (||f|| ||g||), in [-1, 1]; None when
+    the norms were unavailable or zero)."""
 
     alpha: float
     beta: float
     gamma: float
     peak: float
     index: tuple[int, int, int]
+    score: float | None = None
 
     @property
     def euler(self) -> tuple[float, float, float]:
         return (self.alpha, self.beta, self.gamma)
+
+    @property
+    def rank_key(self) -> float:
+        """Cross-template ranking value: the normalized score when
+        available, else the raw peak."""
+        return self.peak if self.score is None else self.score
 
 
 def _parabolic_offset(ym: float, y0: float, yp: float) -> float:
@@ -85,12 +100,15 @@ def _parabolic_offset(ym: float, y0: float, yp: float) -> float:
     return float(np.clip(0.5 * (ym - yp) / den, -0.5, 0.5))
 
 
-def peak_euler(C: np.ndarray, B: int, refine: bool = True) -> MatchResult:
+def peak_euler(C: np.ndarray, B: int, refine: bool = True,
+               norm: float | None = None) -> MatchResult:
     """Argmax of Re C over the (2B)^3 Euler grid -> MatchResult.
 
     refine=True fits a 1-D quadratic per axis through the peak (periodic
     wrap on alpha/gamma; beta skips refinement at the grid edges), pushing
     the error below the pi/B grid resolution for well-separated peaks.
+    `norm` = ||f|| ||g|| of the correlated pair; when given (and nonzero)
+    the result carries score = peak / norm.
     """
     Cr = np.asarray(C).real
     i, j, k = np.unravel_index(int(np.argmax(Cr)), Cr.shape)
@@ -110,37 +128,55 @@ def peak_euler(C: np.ndarray, B: int, refine: bool = True) -> MatchResult:
                 Cr[i, j - 1, k], Cr[i, j, k], Cr[i, j + 1, k])
         a %= 2 * np.pi
         g %= 2 * np.pi
-    return MatchResult(alpha=a, beta=b, gamma=g,
-                       peak=float(Cr[i, j, k]), index=(int(i), int(j), int(k)))
+    peak = float(Cr[i, j, k])
+    score = peak / norm if norm else None
+    return MatchResult(alpha=a, beta=b, gamma=g, peak=peak,
+                       index=(int(i), int(j), int(k)), score=score)
+
+
+def pair_norm(f, g) -> float:
+    """||f|| ||g|| over the coefficient vectors -- the normalizer that
+    makes correlation peaks comparable across templates (NCC score)."""
+    return float(jnp.linalg.norm(f)) * float(jnp.linalg.norm(g))
 
 
 class CorrelationEngine:
-    """Batched SO(3) correlation at one bandwidth.
+    """Batched SO(3) correlation at one bandwidth, executing on a
+    :class:`repro.plan.Transform`.
 
-    Builds the clustered plan once (cluster axis padded to the kernel
-    tile), binds a fused V-lane iDWT, and serves correlation grids /
-    matches for any request count by chunking onto the V lanes.
-
-    Parameters: ``lane_width`` is V, the number of simultaneous inverse
-    transforms per kernel launch; ``impl`` selects the iDWT schedule
-    ("fused" default; "onthefly"/"dense" accepted for comparison); ``tk``
-    is the cluster-tile size handed to the kernel.
+    Preferred construction is from a plan -- ``repro.plan(B).engine()``
+    or ``CorrelationEngine(transform=t)`` -- so the engine inherits the
+    plan's resolved schedule and lane width V.  The legacy keyword form
+    ``CorrelationEngine(B, lane_width=..., impl=..., tk=...)`` is kept as
+    a thin shim: it builds (or fetches, via the plan cache) the
+    equivalent Transform.  ``lane_width=None`` takes V from the plan's
+    autotune/VMEM-guard resolution instead of a hard-coded default.
     """
 
-    def __init__(self, B: int, *, dtype=jnp.float64, lane_width: int = 4,
-                 impl: str = "fused", tk: int = 8, interpret=None):
-        if lane_width < 1:
-            raise ValueError(f"lane_width must be >= 1, got {lane_width}")
-        self.B = B
-        self.lane_width = lane_width
-        self.impl = impl
-        self.plan = batched.build_plan(B, dtype=dtype, pad_to=tk)
-        self._idwt_fn = ops.make_idwt_fn(self.plan, impl, tk=tk,
-                                         interpret=interpret,
-                                         batch=lane_width)
-        self._cdtype = jnp.complex64 if jnp.dtype(dtype) == jnp.float32 \
-            else jnp.complex128
-        self._mask = jnp.asarray(soft.coeff_mask(B))
+    def __init__(self, B: int | None = None, *, transform=None,
+                 dtype=jnp.float64, lane_width: int | None = None,
+                 impl: str = "fused", tk: int | None = None, interpret=None):
+        if transform is None:
+            if B is None:
+                raise ValueError("CorrelationEngine needs B or transform")
+            if lane_width is not None and lane_width < 1:
+                raise ValueError(
+                    f"lane_width must be >= 1, got {lane_width}")
+            from repro import plan as plan_mod
+            transform = plan_mod.plan(
+                B, dtype=dtype, impl=impl,
+                V="auto" if lane_width is None else lane_width,
+                tk=tk, interpret=interpret)
+        elif B is not None and B != transform.B:
+            raise ValueError(f"B={B} conflicts with transform.B="
+                             f"{transform.B}")
+        self.transform = transform
+        self.B = transform.B
+        self.lane_width = transform.V
+        self.impl = transform.impl
+        self.plan = transform.soft_plan        # compat alias
+        self._cdtype = transform.cdtype
+        self._mask = jnp.asarray(soft.coeff_mask(self.B))
         self.reset_stats()
 
     def reset_stats(self) -> None:
@@ -172,26 +208,19 @@ class CorrelationEngine:
         """(N, B, 2B-1) x (N, B, 2B-1) coeff stacks -> (N, 2B, 2B, 2B)
         correlation grids C_n(R) = <f_n, Lambda(R) g_n>.
 
-        Chunks of ``lane_width`` requests run as ONE fused iFSOFT launch;
-        the final partial chunk is zero-padded to the lane width so every
-        launch reuses the single compiled kernel shape.
+        Chunks of ``lane_width`` requests run as ONE lane-packed iFSOFT
+        launch via the plan's ``inverse_batch`` executor; the final
+        partial chunk is zero-padded to the lane width so every launch
+        reuses the single compiled kernel shape.  Launch accounting lands
+        in THIS engine's ``stats`` (the plan is shared; its counters are
+        not ours).
         """
-        V = self.lane_width
         B = self.B
         if not len(fs):
             return np.zeros((0, 2 * B, 2 * B, 2 * B), complex)
         T = jnp.stack([self._pair_coeffs(f, g) for f, g in zip(fs, gs)])
-        N = T.shape[0]
-        outs = []
-        for n0 in range(0, N, V):
-            chunk, n = ops.pad_lanes(T[n0: n0 + V], V)
-            self.stats["padded_lanes"] += V - n
-            Cb = batched.inverse_clustered_batch(self.plan, chunk,
-                                                 idwt_fn=self._idwt_fn)
-            self.stats["launches"] += 1
-            self.stats["transforms"] += n
-            outs.append(Cb[:n])   # stay on device: don't sync per chunk
-        return np.conj(np.asarray(jnp.concatenate(outs, axis=0)))
+        Cb = self.transform.inverse_batch(T, stats=self.stats)
+        return np.conj(np.asarray(Cb))
 
     # -- matching entry points ----------------------------------------------
 
@@ -200,25 +229,28 @@ class CorrelationEngine:
         return self.match_batch([f], [g], refine=refine)[0]
 
     def match_batch(self, fs, gs, *, refine: bool = True) -> list[MatchResult]:
-        """Many independent (f_n, g_n) pairs -> one MatchResult each."""
+        """Many independent (f_n, g_n) pairs -> one MatchResult each,
+        scored by normalized cross-correlation."""
         fs = [self.as_coeffs(f) for f in fs]
         gs = [self.as_coeffs(g) for g in gs]
         if len(fs) != len(gs):
             raise ValueError(f"got {len(fs)} queries vs {len(gs)} templates")
         C = self.correlation_grids(fs, gs)
-        return [peak_euler(C[n], self.B, refine=refine)
+        return [peak_euler(C[n], self.B, refine=refine,
+                           norm=pair_norm(fs[n], gs[n]))
                 for n in range(C.shape[0])]
 
     def match_bank(self, f, bank, *, refine: bool = True
                    ) -> tuple[int, list[MatchResult]]:
         """One query f against a template bank -> (best index, per-template
-        results).  Peaks are comparable across templates after normalizing
-        each template's coefficient energy upstream."""
+        results).  The winner is picked by the normalized score
+        (peak / (||f|| ||g||)), so templates of different power compete
+        fairly -- a loud template cannot buy its raw peak a win."""
         if not len(bank):
             raise ValueError("empty template bank")
         f = self.as_coeffs(f)
         results = self.match_batch([f] * len(bank), list(bank), refine=refine)
-        best = int(np.argmax([r.peak for r in results]))
+        best = int(np.argmax([r.rank_key for r in results]))
         return best, results
 
 

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import soft
 
-from .correlate import CorrelationEngine, peak_euler
+from .correlate import CorrelationEngine, pair_norm, peak_euler
 
 __all__ = ["SO3Service", "infer_bandwidth"]
 
@@ -64,8 +64,11 @@ class SO3Service:
     """Queue + packer in front of per-bandwidth CorrelationEngines."""
 
     def __init__(self, bandwidths=(8,), *, dtype=jnp.float64,
-                 lane_width: int = 4, impl: str = "fused", tk: int = 8,
-                 interpret=None, max_wait_ms: float = 2.0):
+                 lane_width: int | None = 4, impl: str = "fused",
+                 tk: int | None = 8, interpret=None,
+                 max_wait_ms: float = 2.0):
+        """lane_width=None takes V per bandwidth from the plan's autotune
+        / VMEM-guard resolution (repro.plan) instead of a fixed width."""
         self.bandwidths = tuple(bandwidths)
         self.lane_width = lane_width
         self.max_wait_ms = max_wait_ms
@@ -85,6 +88,8 @@ class SO3Service:
         self._latencies: list[float] = []
         self._completed = 0
         self._warmup_s: dict[int, float] = {}
+        # per-bandwidth lane widths resolved by the plans (lane_width=None)
+        self._limits: dict[int, int] = {}
 
     # -- engines ------------------------------------------------------------
 
@@ -101,7 +106,15 @@ class SO3Service:
                     eng = CorrelationEngine(B, **self._engine_kw)
                     with self._lock:
                         self._engines[B] = eng
+                        self._limits[B] = eng.lane_width
         return eng
+
+    def _lane_limit(self, B: int) -> int:
+        """Packing width for one bandwidth: the configured lane_width, or
+        the width the plan resolved (builds the engine on first use)."""
+        if self.lane_width is not None:
+            return self.lane_width
+        return self.engine(B).lane_width
 
     def warmup(self) -> dict[int, float]:
         """Build plans + compile one padded fused launch per configured
@@ -149,7 +162,8 @@ class SO3Service:
                 gs = [eng.as_coeffs(p.g) for p in group]
                 C = eng.correlation_grids(fs, gs)  # ONE fused launch/lane
             done = time.perf_counter()
-            results = [peak_euler(C[n], B, refine=p.refine)
+            results = [peak_euler(C[n], B, refine=p.refine,
+                                  norm=pair_norm(fs[n], gs[n]))
                        for n, p in enumerate(group)]
         except Exception as e:  # pragma: no cover - surfaced via futures
             for p in group:
@@ -176,9 +190,10 @@ class SO3Service:
             if not Bs:
                 return served
             for B in Bs:
+                limit = self._lane_limit(B)
                 while True:
                     with self._lock:
-                        group = self._pop_group(B, self.lane_width)
+                        group = self._pop_group(B, limit)
                     if not group:
                         break
                     self._process_group(B, group)
@@ -226,15 +241,25 @@ class SO3Service:
                 # serve the bandwidth with the oldest waiting request
                 B = min((q[0].t_submit, b) for b, q in self._queues.items()
                         if q)[1]
-                deadline = self._queues[B][0].t_submit + wait_s
-                while (self._running
-                       and len(self._queues[B]) < self.lane_width
-                       and time.perf_counter() < deadline):
-                    self._cv.wait(timeout=max(deadline - time.perf_counter(),
-                                              1e-4))
-                if not self._running:
-                    return      # stop() decides: drain serves, else cancel
-                group = self._pop_group(B, self.lane_width)
+                limit = self.lane_width or self._limits.get(B)
+                if limit is not None:
+                    deadline = self._queues[B][0].t_submit + wait_s
+                    while (self._running
+                           and len(self._queues[B]) < limit
+                           and time.perf_counter() < deadline):
+                        self._cv.wait(timeout=max(
+                            deadline - time.perf_counter(), 1e-4))
+                    if not self._running:
+                        return  # stop() decides: drain serves, else cancel
+                    group = self._pop_group(B, limit)
+                else:
+                    group = None
+            if group is None:
+                # first request at this bandwidth under lane_width=None:
+                # build the engine (plan resolution) OUTSIDE the lock so
+                # submitters never block on a kernel compile, then retry
+                self.engine(B)
+                continue
             if group:
                 self._process_group(B, group)
 
@@ -245,19 +270,22 @@ class SO3Service:
         with self._lock:
             lat = sorted(self._latencies)
             eng_stats = {B: dict(e.stats) for B, e in self._engines.items()}
+            widths = {B: e.lane_width for B, e in self._engines.items()}
             queued = sum(len(q) for q in self._queues.values())
             completed = self._completed
             warmup_s = dict(self._warmup_s)
         launches = sum(s["launches"] for s in eng_stats.values())
         transforms = sum(s["transforms"] for s in eng_stats.values())
+        capacity = sum(s["launches"] * widths[B]
+                       for B, s in eng_stats.items())
         out = {
             "completed": completed,
             "queued": queued,
             "launches": launches,
             "transforms": transforms,
-            "lane_width": self.lane_width,
-            "occupancy": transforms / (launches * self.lane_width)
-            if launches else 0.0,
+            "lane_width": self.lane_width if self.lane_width is not None
+            else widths,
+            "occupancy": transforms / capacity if capacity else 0.0,
             "warmup_s": warmup_s,
             "engines": eng_stats,
         }

@@ -1,0 +1,224 @@
+"""Planner/executor layer (repro.plan): cache-key identity, roundtrips
+for every selectable schedule, measured tuning, lane-packed batch
+executors, sharded-vs-local equivalence (subprocess mesh), normalized
+correlation scoring, and deprecation-shim parity with the old entry
+points."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import plan as plan_mod
+from repro.core import batched, soft
+from repro.kernels import ops
+from repro.so3 import CorrelationEngine, s2
+from repro.so3.correlate import random_rotation
+
+
+MASKS = {B: soft.coeff_mask(B) for B in (4, 8, 16)}
+
+
+def roundtrip_err(t, seed=0):
+    fhat = soft.random_coeffs(t.B, seed)
+    back = np.asarray(t.forward(t.inverse(fhat)))
+    return np.abs(back - fhat)[MASKS[t.B]].max()
+
+
+# ---------------------------------------------------------------------------
+# cache identity: same config -> same Transform (and same resources)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_identity():
+    a = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    before = plan_mod.cache_stats()
+    b = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    after = plan_mod.cache_stats()
+    assert a is b
+    assert after["hits"] == before["hits"] + 1
+    # resources built on the shared object are literally shared
+    assert a.dwt_fn is b.dwt_fn and a.idwt_fn_batch is b.idwt_fn_batch
+    assert a.soft_plan is b.soft_plan
+    # a different config is a different Transform
+    c = plan_mod.plan(8, impl="fused", V=4, tk=4)
+    assert c is not a and c.V == 4
+
+
+def test_plan_is_callable_module():
+    """repro.plan(...) and repro.plan.plan(...) are the same entry."""
+    assert plan_mod(8, impl="fused", V=2, tk=4) is \
+        plan_mod.plan(8, impl="fused", V=2, tk=4)
+
+
+def test_plan_rejects_bad_config():
+    with pytest.raises(ValueError, match="impl"):
+        plan_mod.plan(8, impl="nope")
+    with pytest.raises(ValueError, match="V must"):
+        plan_mod.plan(8, V=0)
+    with pytest.raises(ValueError, match="tune"):
+        plan_mod.plan(8, tune="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# roundtrip for every schedule the planner can select
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [4, 8, 16])
+@pytest.mark.parametrize("impl", plan_mod.IMPLS)
+def test_roundtrip_every_impl(B, impl):
+    t = plan_mod.plan(B, impl=impl, V=1, tk=4)
+    assert t.impl == impl
+    assert roundtrip_err(t, seed=B) < 1e-11
+
+
+def test_plan_matches_dense_oracle_bitwise_tolerances():
+    """The plan-selected fused V-lane path agrees with the dense oracle
+    (the PR-2 acceptance contract, now routed through the planner)."""
+    B = 8
+    tf = plan_mod.plan(B, impl="fused", V=4, tk=4)
+    tr = plan_mod.plan(B, impl="reference")
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, s))
+                       for s in range(4)])
+    f_fused = np.asarray(tf.inverse_batch(fhats))
+    f_ref = np.asarray(tr.inverse_batch(fhats))
+    np.testing.assert_allclose(f_fused, f_ref, rtol=1e-11, atol=1e-11)
+    back = np.asarray(tf.forward_batch(jnp.asarray(f_fused)))
+    np.testing.assert_allclose(back, np.asarray(fhats), rtol=1e-8,
+                               atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# schedule resolution: static VMEM guard + measured autotune
+# ---------------------------------------------------------------------------
+
+def test_static_auto_v_respects_vmem_budget():
+    wide = plan_mod.plan(8, impl="fused")
+    assert wide.V == max(plan_mod.AUTO_V_CANDIDATES)
+    assert wide.schedule.vmem_bytes <= wide.schedule.vmem_limit
+    # a budget that only admits the narrowest lane width degrades to V=1
+    tight = plan_mod.plan(8, impl="fused",
+                          vmem_budget=plan_mod.plan(
+                              8, impl="fused", V=1).schedule.vmem_bytes)
+    assert tight.V == 1 and tight.schedule.source == "static"
+    with pytest.raises(ValueError, match="VMEM"):
+        plan_mod.plan(8, impl="fused", vmem_budget=1)
+    with pytest.raises(ValueError, match="VMEM"):
+        plan_mod.plan(8, impl="fused", V=8, vmem_budget=1)
+
+
+def test_measured_tune_resolves_via_autotune(tmp_path):
+    cache = tmp_path / "autotune.json"
+    t = plan_mod.plan(4, impl="fused", tune="measure", tune_reps=1,
+                      tune_cache=cache)
+    s = t.schedule
+    assert s.source == "measured"
+    assert s.V in plan_mod.AUTO_V_CANDIDATES
+    assert s.per_transform_s > 0
+    assert cache.exists()            # winners persisted for the next plan
+    assert roundtrip_err(t, seed=2) < 1e-11
+
+
+# ---------------------------------------------------------------------------
+# batch executors: lane packing + stats accounting
+# ---------------------------------------------------------------------------
+
+def test_batch_executors_match_singles_and_count_lanes():
+    B, V, n = 8, 2, 3
+    t = plan_mod.plan(B, impl="fused", V=V, tk=4)
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, s))
+                       for s in range(n)])
+    t.reset_stats()
+    fs = t.inverse_batch(fhats)
+    assert t.stats == {"launches": 2, "transforms": 3, "padded_lanes": 1}
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(fs[i]),
+                                   np.asarray(t.inverse(fhats[i])),
+                                   rtol=1e-11, atol=1e-11)
+    # external stats sink: a client's accounting doesn't touch the plan's
+    sink = dict(launches=0, transforms=0, padded_lanes=0)
+    before = dict(t.stats)
+    t.forward_batch(fs, stats=sink)
+    assert sink["launches"] == 2 and t.stats == before
+    # empty batch short-circuits
+    assert t.inverse_batch(jnp.zeros((0, B, 2 * B - 1, 2 * B - 1),
+                                     t.cdtype)).shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine integration: V flows from the plan; scores are normalized
+# ---------------------------------------------------------------------------
+
+def test_engine_lane_width_comes_from_plan():
+    eng = CorrelationEngine(8)               # no hard-coded lane width
+    assert eng.lane_width == eng.transform.V
+    assert eng.transform.schedule.source in ("static", "measured")
+    t = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    assert t.engine() is t.engine()          # cached on the Transform
+    assert t.engine().lane_width == 2
+
+
+def test_normalized_score_ranks_across_template_power():
+    """A 50x louder mismatched template can out-peak the planted one, but
+    the normalized score still picks the planted match (satellite: peaks
+    comparable across templates of different power)."""
+    B = 8
+    true = random_rotation(3)
+    g = soft.random_s2_coeffs(B, seed=80)
+    loud = 50.0 * soft.random_s2_coeffs(B, seed=81)
+    query = s2.rotate_s2_coeffs(g, true)
+    eng = CorrelationEngine(B, lane_width=2, tk=4)
+    best, results = eng.match_bank(query, [loud, g])
+    assert results[0].peak > results[1].peak      # raw peak is fooled
+    assert best == 1                              # the score is not
+    assert results[1].score == pytest.approx(1.0, abs=0.1)
+    assert results[0].score < 0.5
+    assert results[1].rank_key == results[1].score
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: the old entry points match the plan path exactly
+# ---------------------------------------------------------------------------
+
+def test_shim_parity_with_old_entry_points():
+    B = 8
+    t = plan_mod.plan(B, impl="fused", V=2, tk=4)
+    fhat = soft.random_coeffs(B, seed=9)
+    # old layer-by-layer path with the identical configuration
+    old_plan = batched.build_plan(B, dtype=jnp.float64, pad_to=4)
+    assert old_plan is t.soft_plan               # one plan, every consumer
+    idwt = ops.make_idwt_fn(old_plan, "fused", tk=4)
+    dwt = ops.make_dwt_fn(old_plan, "fused", tk=4)
+    f_old = np.asarray(batched.inverse_clustered(old_plan, fhat,
+                                                 idwt_fn=idwt))
+    np.testing.assert_array_equal(np.asarray(t.inverse(fhat)), f_old)
+    back_old = np.asarray(batched.forward_clustered(
+        old_plan, jnp.asarray(f_old), dwt_fn=dwt))
+    np.testing.assert_array_equal(np.asarray(t.forward(f_old)), back_old)
+    # old-style engine construction == plan-based engine
+    f, g = s2.rotate_s2_coeffs(soft.random_s2_coeffs(B, 7),
+                               random_rotation(7)), soft.random_s2_coeffs(B, 7)
+    r_old = CorrelationEngine(B, lane_width=2, tk=4).match(f, g)
+    r_new = plan_mod.plan(B, impl="fused", V=2, tk=4).correlate(f, g)
+    assert r_old.index == r_new.index
+    np.testing.assert_allclose(r_old.euler, r_new.euler, atol=1e-12)
+    np.testing.assert_allclose(r_old.score, r_new.score, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-local equivalence on a 2-device CPU mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_sharded_plan_matches_local():
+    prog = pathlib.Path(__file__).parent / "progs" / "dist_plan.py"
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(prog)], capture_output=True,
+                          text=True, timeout=900, env=env)
+    assert proc.returncode == 0, (
+        f"dist_plan.py failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "DIST_PLAN_OK" in proc.stdout
