@@ -1,0 +1,154 @@
+"""Distributed executor smoke benchmark: serial-loop vs lane-packed
+sharded batches on a 2-device mesh.
+
+PR-3 left the sharded path serving batches serially (one shard_map
+launch -- and one all-to-all -- PER transform); the mesh-resident
+DistExecutor packs V transforms into the fused kernel's lane axis INSIDE
+the shard_map, so a batch of n costs ceil(n/V) launches and collectives.
+This section measures exactly that contract on a faked 2-device CPU
+mesh:
+
+  * serial_s   -- n single sharded transforms through the same executor
+                  (the old per-item behavior)
+  * packed_s   -- one lane-packed `inverse_batch` of the same n
+  * occupancy  -- packed transforms / (launches * V)
+
+Structural checks (CI smoke): the packed result matches the LOCAL plan
+at f64 magnitudes, launch accounting is ceil(n/V), and the packed path
+beats the serial loop.  Rows are emitted as `JSON ` lines.
+
+The real process re-execs itself in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=2 (per the dry-run
+contract, only subprocesses fake device counts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+
+def run_child(fast=False):
+    import jax
+    import jax.numpy as jnp
+    from repro import plan as plan_mod
+    from repro.core import soft
+    from repro.core.compat import make_mesh
+
+    assert jax.device_count() == 2, jax.device_count()
+    mesh = make_mesh((2,), ("data",))
+    bandwidths = (8,) if fast else (8, 16)
+    n = 8
+    rows = []
+    for B in bandwidths:
+        t = plan_mod.plan(B, impl="fused", mesh=mesh, axis=("data",))
+        t_local = plan_mod.plan(B, impl="fused", tk=4)
+        V = t.V
+        fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, seed=s))
+                           for s in range(n)])
+
+        # warm both compiled shapes (V=1 single lanes + V-wide batch)
+        jax.block_until_ready(t.inverse(fhats[0]))
+        jax.block_until_ready(t.inverse_batch(fhats))
+
+        t.reset_stats()
+        t0 = time.perf_counter()
+        f_serial = jnp.stack([t.inverse(f) for f in fhats])
+        jax.block_until_ready(f_serial)
+        serial_s = time.perf_counter() - t0
+        launches_serial = t.stats["launches"]
+
+        t.reset_stats()
+        t0 = time.perf_counter()
+        f_packed = t.inverse_batch(fhats)
+        jax.block_until_ready(f_packed)
+        packed_s = time.perf_counter() - t0
+        launches_packed = t.stats["launches"]
+        occupancy = t.stats["transforms"] / (launches_packed * V)
+
+        f_ref = np.stack([np.asarray(t_local.inverse(fhats[i]))
+                          for i in range(n)])
+        err = float(np.abs(np.asarray(f_packed) - f_ref).max())
+        rows.append({
+            "section": "distributed", "B": B, "impl": t.impl, "V": V,
+            "n_shards": t.n_shards, "n": n,
+            "serial_s": serial_s, "packed_s": packed_s,
+            "speedup": serial_s / packed_s,
+            "launches_serial": launches_serial,
+            "launches_packed": launches_packed,
+            "expected_launches": -(-n // V),
+            "occupancy": occupancy,
+            "max_abs_err": err,
+        })
+    return rows
+
+
+def check(rows) -> list[str]:
+    failures = []
+    for r in rows:
+        tag = f"B={r['B']}"
+        if r["max_abs_err"] >= 1e-11:
+            failures.append(f"{tag}: packed sharded batch off the local "
+                            f"plan by {r['max_abs_err']:.2e}")
+        if r["launches_packed"] != r["expected_launches"]:
+            failures.append(f"{tag}: {r['launches_packed']} packed launches "
+                            f"!= ceil(n/V) = {r['expected_launches']}")
+        if r["launches_serial"] != r["n"]:
+            failures.append(f"{tag}: serial baseline issued "
+                            f"{r['launches_serial']} launches, not n")
+        if r["packed_s"] >= r["serial_s"]:
+            failures.append(f"{tag}: lane-packed batch ({r['packed_s']:.3f}s)"
+                            f" did not beat the serial loop "
+                            f"({r['serial_s']:.3f}s)")
+    return failures
+
+
+def child_main(fast=False):
+    rows = run_child(fast=fast)
+    print("# distributed: serial-loop vs lane-packed sharded batches "
+          "(2 shards)")
+    print("B,V,n,serial_s,packed_s,speedup,launches,occupancy,err")
+    for r in rows:
+        print(f"{r['B']},{r['V']},{r['n']},{r['serial_s']:.4f},"
+              f"{r['packed_s']:.4f},{r['speedup']:.2f},"
+              f"{r['launches_packed']},{r['occupancy']:.2f},"
+              f"{r['max_abs_err']:.2e}")
+    for r in rows:
+        print("JSON " + json.dumps(r))
+    failures = check(rows)
+    for msg in failures:
+        print("CHECK FAILED:", msg)
+    if failures:
+        raise SystemExit(1)
+    print("CHECKS OK: packed sharded batches match the local plan, issue "
+          "ceil(n/V) lane-packed launches, and beat the serial loop")
+
+
+def main(fast=False):
+    """Re-exec in a subprocess with 2 fake CPU devices (the parent
+    process may already hold a single-device jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env.setdefault("JAX_ENABLE_X64", "1")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.distributed", "--child"]
+    if fast:
+        cmd.append("--fast")
+    proc = subprocess.run(cmd, env=env, text=True, capture_output=True,
+                          timeout=1800)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-4000:])
+        raise SystemExit(proc.returncode)
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        sys.path.insert(0, "src")
+        child_main(fast="--fast" in sys.argv)
+    else:
+        main(fast="--fast" in sys.argv)

@@ -9,6 +9,7 @@ Sections:
   kernel_schedule  folded-attention / ragged-DWT grid savings
   dwt_schedules    dense/ragged/onthefly/fused DWT kernels + V batching
   plan             repro.plan planner: build time, cache hits, executors
+  distributed      serial-loop vs lane-packed sharded batches (2-dev mesh)
   correlation      SO(3) rotational matching: bank + service on fused lanes
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts
@@ -73,7 +74,8 @@ def lm_step(fast=False):
 
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
-            "dwt_schedules", "plan", "correlation", "lm_step", "roofline")
+            "dwt_schedules", "plan", "distributed", "correlation", "lm_step",
+            "roofline")
 
 
 def main() -> None:
@@ -109,6 +111,9 @@ def main() -> None:
         elif name == "plan":
             from benchmarks import planner
             planner.main(fast=args.fast)
+        elif name == "distributed":
+            from benchmarks import distributed
+            distributed.main(fast=args.fast)
         elif name == "correlation":
             from benchmarks import correlation
             correlation.main(fast=args.fast)

@@ -81,18 +81,51 @@ def _plan_unflatten(aux, leaves):
 jax.tree_util.register_pytree_node(SoftPlan, _plan_flatten, _plan_unflatten)
 
 
-def shard_balanced_order(l_start: np.ndarray, n_shards: int) -> np.ndarray:
+def shard_balanced_order(l_start: np.ndarray, n_shards: int,
+                         n_padded: int | None = None) -> np.ndarray:
     """Cluster permutation so that contiguous 1/n-th blocks (what shard_map
     hands each device) are (a) work-balanced ACROSS shards and (b)
     extent-sorted WITHIN each shard.
 
     Deal the extent-sorted clusters round-robin (paper-P3's balanced static
     schedule, cf. indexing.balanced_order) and lay shard s's hand out as
-    global block s: sorted[s::n] is itself descending in work, so every
-    local block supports bucketed l-truncation (make_bucketed_dwt_fn)."""
+    global block s: each hand is itself descending in work, so every
+    local block supports bucketed l-truncation (make_bucketed_dwt_fn).
+
+    n_padded: the cluster count AFTER build_plan's pad_to padding.  Pad
+    rows are appended at the global end, i.e. they land in the tail of
+    the LAST shard(s); passing n_padded sizes the hands so the shard
+    boundaries of the padded layout fall on hand boundaries (pad rows
+    carry l_start = B-1 / zero work, so the last hand's sort order and
+    every shard's extent-sortedness survive the padding).  Without it a
+    cluster count not divisible by n_shards shifts the block boundaries
+    off the hands and the per-shard sorting -- and with it the ragged
+    l0-truncation -- silently degrades."""
+    K = len(l_start)
     work_sorted = np.argsort(l_start, kind="stable")  # ascending m = desc work
-    return np.concatenate([work_sorted[s::n_shards]
-                           for s in range(n_shards)]).astype(np.int64)
+    if n_padded is None or n_padded == K:
+        return np.concatenate([work_sorted[s::n_shards]
+                               for s in range(n_shards)]).astype(np.int64)
+    if n_padded % n_shards:
+        raise ValueError(f"n_padded={n_padded} % n_shards={n_shards}")
+    kloc = n_padded // n_shards
+    # real-cluster capacity per hand: pad rows fill the last shards' tails
+    sizes = [kloc] * n_shards
+    rem = n_padded - K
+    s = n_shards - 1
+    while rem > 0:
+        take = min(kloc, rem)
+        sizes[s] -= take
+        rem -= take
+        s -= 1
+    hands: list[list[int]] = [[] for _ in range(n_shards)]
+    idx = 0
+    for c in work_sorted:
+        while len(hands[idx % n_shards]) >= sizes[idx % n_shards]:
+            idx += 1            # this hand is full of real clusters
+        hands[idx % n_shards].append(int(c))
+        idx += 1
+    return np.concatenate(hands).astype(np.int64)
 
 
 # LRU-bounded: a plan holds the full (K, L, J) Wigner table, so unbounded
@@ -198,6 +231,15 @@ def plan_lstart(plan: SoftPlan) -> np.ndarray:
     l_start = np.full(plan.n_padded, plan.B - 1, np.int32)
     l_start[: plan.n_clusters] = plan.table.rep[:, 0]
     return l_start
+
+
+def shard_lstart(plan: SoftPlan, n_shards: int) -> np.ndarray:
+    """(n_shards, kloc) per-shard l-start blocks in the contiguous layout
+    shard_map hands each device.  With shard_balanced_order every row is
+    descending in work (ascending l-start after the extent sort), which is
+    what the per-local-tile l0 schedules (fused_shard_meta,
+    bucket_boundaries_from_lstart) rely on."""
+    return plan_lstart(plan).reshape(n_shards, plan.n_padded // n_shards)
 
 
 @functools.lru_cache(maxsize=32)

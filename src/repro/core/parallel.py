@@ -1,4 +1,12 @@
-"""Distributed FSOFT / iFSOFT via shard_map (paper Sec. 3, TPU-native).
+"""Mesh-resident distributed executor for FSOFT / iFSOFT (paper Sec. 3).
+
+:class:`DistExecutor` owns everything one (plan, mesh, axis) pairing
+needs to execute sharded transforms -- the shard ``PartitionSpec``s, the
+reflection/sign tables, the device-local DWT/iDWT closures, and the
+jitted ``shard_map`` callables -- built ONCE when the executor is
+constructed and reused by every subsequent call.  Executors are normally
+owned by a :class:`repro.plan.Transform` (``plan(B, mesh=...)``); the
+module-level :func:`dist_executor` memoizes standalone ones.
 
 Pipeline (forward; inverse is the exact mirror):
 
@@ -13,6 +21,13 @@ Pipeline (forward; inverse is the exact mirror):
            then the clustered DWT contraction runs entirely device-local
            (the paper's 'exclusive memory range' property).
 
+Batches ride the kernel's lane axis INSIDE the shard_map:
+``forward_lanes`` / ``inverse_lanes`` take a (V, ...) transform stack,
+fold the V lanes into the contraction axis (C2 = V*C*2), and issue ONE
+all-to-all and one local-kernel launch for the whole stack -- V
+transforms cost one collective instead of V (``forward_batch`` /
+``inverse_batch`` chunk arbitrary request counts onto that path).
+
 Coefficients live in the *packed* layout out[k, l, c] (cluster-sharded,
 member slot c), which the inverse consumes directly -- a distributed
 roundtrip therefore needs exactly two all-to-alls and no host gather.
@@ -20,10 +35,22 @@ roundtrip therefore needs exactly two all-to-alls and no host gather.
 
 The Wigner table d[k, l, j] is sharded over clusters, so the B = 512 table
 (~0.4 TB in f64) that forced the paper onto a 128 GB RAM node drops to
-~1.6 GB per device on a 16x16 pod.
+~1.6 GB per device on a 16x16 pod -- and the fused local kernels drop the
+table entirely (recurrence seeds only).
+
+Migration note: :func:`distributed_forward` / :func:`distributed_inverse`
+are kept as thin shims over a memoized executor.  They rebuilt specs and
+closures per call before; new code should hold a
+``repro.plan(B, mesh=...)`` Transform (or a :func:`dist_executor`) and
+call its executors instead::
+
+    t = repro.plan(B, mesh=mesh, axis=("data",))
+    fhat  = t.forward(f)              # sharded single transform
+    grids = t.inverse_batch(fhats)    # lane-packed sharded batch
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from functools import partial
@@ -38,10 +65,11 @@ from .compat import shard_map, shard_map_norep
 from .batched import SoftPlan, fft_analysis, fft_synthesis
 
 __all__ = [
-    "check_mesh_compat", "distributed_forward", "distributed_inverse",
+    "DistExecutor", "dist_executor", "check_mesh_compat",
+    "distributed_forward", "distributed_inverse",
     "LocalDWT", "ShardMeta", "fused_shard_meta", "make_bucketed_local_dwt",
     "make_fused_local_dwt", "make_fused_local_idwt", "packed_to_dense",
-    "dense_to_packed",
+    "dense_to_packed", "packed_to_dense_batch", "dense_to_packed_batch",
 ]
 
 
@@ -149,7 +177,7 @@ def fused_shard_meta(plan: SoftPlan, n_shards: int,
     directions read ONE metadata build instead of recomputing per call."""
     from repro.kernels import ops as kops  # deferred: kernels import core
 
-    from .batched import plan_lstart
+    from .batched import shard_lstart
 
     kloc = plan.n_padded // n_shards
     if tk is None:  # largest cluster-tile <= 8 dividing the local count
@@ -158,7 +186,7 @@ def fused_shard_meta(plan: SoftPlan, n_shards: int,
         raise ValueError(f"local cluster count {kloc} not divisible by "
                          f"tk={tk}")
     seeds, m, mp, cb = kops.onthefly_inputs(plan)
-    per_shard = plan_lstart(plan).reshape(n_shards, kloc)
+    per_shard = shard_lstart(plan, n_shards)
     l0s = per_shard.reshape(n_shards, kloc // tk, tk).min(axis=(0, 2))
     return ShardMeta(n_shards=n_shards, tk=tk, seeds=seeds, m=m, mp=mp,
                      cb=cb, l0s=np.asarray(l0s, np.int32))
@@ -202,97 +230,257 @@ def make_fused_local_idwt(plan: SoftPlan, n_shards: int, *, tk=None,
 
 
 # ---------------------------------------------------------------------------
-# forward
+# the mesh-resident executor
+# ---------------------------------------------------------------------------
+
+class DistExecutor:
+    """Sharded FSOFT/iFSOFT executors of one (plan, mesh, axis) pairing.
+
+    Construction normalizes the shard axes, validates mesh compatibility,
+    and binds the device-local DWT/iDWT closures (`local_dwt` /
+    `local_idwt` follow the :func:`distributed_forward` contract: None ->
+    plain einsum over the sharded d-table, a bare fn(d_shard, x2), or a
+    :class:`LocalDWT` such as :func:`make_fused_local_dwt`).  The jitted
+    ``shard_map`` callables are built lazily ONCE per direction and
+    reused by every call -- per-call spec/closure rebuilding (the old
+    ``distributed_*`` behavior) is gone.
+
+    All executors speak the packed coefficient layout (K, L, C); batch
+    entry points carry a leading lane axis:
+
+      forward(f) / inverse(packed)        single transform
+      forward_lanes / inverse_lanes       exactly-V stack, ONE all-to-all
+                                          and one local launch for all V
+      forward_batch / inverse_batch       any count, chunked to lane_width
+
+    Lane packing folds the V transforms into the local kernel's
+    contraction lane axis (C2 = V*C*2), so the fused kernel generates
+    each on-the-fly Wigner row once per V transforms and the collective
+    payload per transform is unchanged while the collective COUNT drops
+    V-fold.
+    """
+
+    def __init__(self, plan: SoftPlan, mesh, axis=("data", "model"), *,
+                 lane_width: int = 1, local_dwt=None, local_idwt=None):
+        self.plan = plan
+        self.mesh = mesh
+        self.axis = (axis,) if isinstance(axis, str) else tuple(axis)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.axis]))
+        check_mesh_compat(plan, self.n_shards)
+        if lane_width < 1:
+            raise ValueError(f"lane_width must be >= 1, got {lane_width}")
+        self.lane_width = int(lane_width)
+        self._ld = _normalize_local_dwt(plan, local_dwt, "klj,kjc->klc")
+        self._lid = _normalize_local_dwt(plan, local_idwt, "klj,klc->kjc")
+        self._calls: dict = {}
+
+    @property
+    def _shard(self):
+        """The flattened shard axis name(s) for PartitionSpecs."""
+        return self.axis if len(self.axis) > 1 else self.axis[0]
+
+    # -- sharded callables (built once, jitted, cached) -----------------
+
+    def _forward_call(self):
+        fn = self._calls.get("fwd")
+        if fn is not None:
+            return fn
+        axis, n, ld = self.axis, self.n_shards, self._ld
+        ax0 = P(self._shard)
+
+        def body(refl, sign, gm, gmp, w, scale, parity, f_loc, *dwt_ops):
+            # f_loc: (V, 2B, jloc, 2B) lane stack of beta shards;
+            # sign/gm/gmp replicated (pre-reshard, full K), w beta-local,
+            # refl/scale applied post-reshard on the cluster shard
+            S = jax.vmap(fft_analysis)(f_loc)         # (V, 2B, jloc, 2B)
+
+            def gather(s):
+                Sm = s[gm, :, gmp]                    # (K, C, jloc)
+                r = Sm * (sign[..., None] * w[None, None, :])
+                r = jnp.stack([r.real, r.imag], -1)   # (K, C, jloc, 2)
+                return jnp.swapaxes(r, 1, 2)          # (K, jloc, C, 2)
+
+            rhs = jax.vmap(gather)(S)                 # (V, K, jloc, C, 2)
+            V, K, jloc, C, _ = rhs.shape
+            rhs = jnp.moveaxis(rhs, 0, 2)             # (K, jloc, V, C, 2)
+            # ONE all-to-all reshards all V lanes together
+            rhs = jax.lax.all_to_all(rhs.reshape(K, jloc, V * C * 2), axis,
+                                     split_axis=0, concat_axis=1, tiled=True)
+            rhs = rhs.reshape(K // n, jloc * n, V, C, 2)
+            rhs = jnp.where(refl[:, None, None, :, None], rhs[:, ::-1], rhs)
+            out = ld.fn(*dwt_ops, rhs.reshape(K // n, jloc * n, V * C * 2))
+            out = out.reshape(*out.shape[:2], V, C, 2)
+            outc = out[..., 0] + 1j * out[..., 1]     # (Kloc, L, V, C)
+            outc = outc * (_refl_sign(refl, parity)[:, :, None, :]
+                           * scale[None, :, None, None])
+            return jnp.moveaxis(outc, 2, 0)           # (V, Kloc, L, C)
+
+        sharded = ld.shard_map()(
+            body, mesh=self.mesh,
+            in_specs=(ax0, P(), P(), P(), ax0, P(), P(),
+                      P(None, None, self._shard, None)) + ld.specs(ax0),
+            out_specs=P(None, self._shard),
+        )
+        fn = jax.jit(sharded)
+        self._calls["fwd"] = fn
+        return fn
+
+    def _inverse_call(self):
+        fn = self._calls.get("inv")
+        if fn is not None:
+            return fn
+        axis, n, ld = self.axis, self.n_shards, self._lid
+        B = self.plan.B
+        ax0 = P(self._shard)
+
+        def body(refl, sign_sh, sign, gm, gmp, parity, packed_loc,
+                 *idwt_ops):
+            # packed_loc: (V, Kloc, L, C) lane stack of cluster shards;
+            # sign_sh cluster-sharded (scales the local lhs), sign
+            # replicated (masks the global bin scatter after all-to-all)
+            lhs = packed_loc * (_refl_sign(refl, parity)[None]
+                                * sign_sh[None, :, None, :])
+            lhs = jnp.stack([lhs.real, lhs.imag], -1)  # (V, Kloc, L, C, 2)
+            V, Kloc, L, C, _ = lhs.shape
+            lhs = jnp.moveaxis(lhs, 0, 2)              # (Kloc, L, V, C, 2)
+            g = ld.fn(*idwt_ops, lhs.reshape(Kloc, L, V * C * 2))
+            J = g.shape[1]
+            g = g.reshape(Kloc, J, V, C, 2)
+            g = jnp.where(refl[:, None, None, :, None], g[:, ::-1], g)
+            # ONE all-to-all reshards all V lanes together
+            g = jax.lax.all_to_all(g.reshape(Kloc, J, V * C * 2), axis,
+                                   split_axis=1, concat_axis=0, tiled=True)
+            K, jloc = g.shape[0], g.shape[1]
+            g = g.reshape(K, jloc, V, C, 2)
+            gc = g[..., 0] + 1j * g[..., 1]            # (K, jloc, V, C)
+            # scatter member columns into FFT bins (unused -> trash bin 2B)
+            gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
+            gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
+
+            def scatter(gl):                           # (K, jloc, C)
+                buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gl.dtype)
+                vals = jnp.swapaxes(gl, 1, 2).reshape(-1, jloc)
+                buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
+                return fft_synthesis(buf[: 2 * B, :, : 2 * B])
+
+            return jax.vmap(scatter, in_axes=2)(gc)    # (V, 2B, jloc, 2B)
+
+        sharded = ld.shard_map()(
+            body, mesh=self.mesh,
+            in_specs=(ax0, ax0, P(), P(), P(), P(),
+                      P(None, self._shard)) + ld.specs(ax0),
+            out_specs=P(None, None, self._shard, None),
+        )
+        fn = jax.jit(sharded)
+        self._calls["inv"] = fn
+        return fn
+
+    # -- executors -------------------------------------------------------
+
+    def forward_lanes(self, fs):
+        """Exactly-V lane stack (V, 2B, 2B, 2B) -> packed (V, K, L, C):
+        one all-to-all and one local DWT launch for the whole stack."""
+        p = self.plan
+        return self._forward_call()(
+            p.reflected, p.sign, p.gather_m, p.gather_mp, p.w, p.scale,
+            p.parity, jnp.asarray(fs), *self._ld.operands)
+
+    def inverse_lanes(self, packed):
+        """Exactly-V packed stack (V, K, L, C) -> samples (V, 2B, 2B, 2B)."""
+        p = self.plan
+        return self._inverse_call()(
+            p.reflected, p.sign, p.sign, p.gather_m, p.gather_mp, p.parity,
+            jnp.asarray(packed), *self._lid.operands)
+
+    def forward(self, f):
+        """FSOFT: samples (2B, 2B, 2B) -> packed coefficients (K, L, C)."""
+        return self.forward_lanes(jnp.asarray(f)[None])[0]
+
+    def inverse(self, packed):
+        """iFSOFT: packed coefficients (K, L, C) -> samples (2B, 2B, 2B)."""
+        return self.inverse_lanes(jnp.asarray(packed)[None])[0]
+
+    def forward_batch(self, fs, *, stats=None):
+        """Any request count, chunked onto lane_width-wide sharded
+        launches (final partial chunk zero-padded: one compiled shape)."""
+        return self._batch(fs, self.forward_lanes, stats)
+
+    def inverse_batch(self, packed, *, stats=None):
+        return self._batch(packed, self.inverse_lanes, stats)
+
+    def _batch(self, xs, lanes_fn, stats):
+        from repro.kernels import ops as kops   # deferred: kernels import core
+        xs = jnp.asarray(xs)
+        if xs.shape[0] == 0:
+            p = self.plan
+            cdtype = (jnp.complex64 if jnp.dtype(p.d.dtype) == jnp.float32
+                      else jnp.complex128)
+            fwd = getattr(lanes_fn, "__func__", None) is \
+                DistExecutor.forward_lanes
+            shape = ((p.n_padded, p.B, p.gather_m.shape[1]) if fwd
+                     else (2 * p.B,) * 3)
+            return jnp.zeros((0,) + shape, cdtype)
+        V = self.lane_width
+        outs = []
+        for n0 in range(0, xs.shape[0], V):
+            chunk, n = kops.pad_lanes(xs[n0: n0 + V], V)
+            out = lanes_fn(chunk)
+            if stats is not None:
+                stats["launches"] += 1
+                stats["transforms"] += n
+                stats["padded_lanes"] += V - n
+            outs.append(out[:n])       # stay on device: no per-chunk sync
+        return jnp.concatenate(outs, axis=0)
+
+
+@functools.lru_cache(maxsize=8)
+def dist_executor(plan: SoftPlan, mesh, axis=("data", "model")) -> DistExecutor:
+    """Memoized default-contraction executor per (plan, mesh, axis) --
+    what the :func:`distributed_forward` / :func:`distributed_inverse`
+    shims execute on.  Plans and meshes hash by identity/value, so
+    repeated shim calls reuse ONE executor (and its jitted callables)."""
+    return DistExecutor(plan, mesh, axis)
+
+
+def _shim_executor(plan, mesh, axis, **kw):
+    """Executor for the deprecated shims: memoized for concrete plans,
+    ephemeral when the caller jitted the shim itself (a traced SoftPlan
+    must not be retained in the lru_cache -- leaked tracers) or swapped
+    the local contraction."""
+    if any(v is not None for v in kw.values()):
+        return DistExecutor(plan, mesh, axis, **kw)
+    if isinstance(plan.d, jax.core.Tracer):
+        return DistExecutor(plan, mesh, axis)
+    return dist_executor(plan, mesh, axis)
+
+
+# ---------------------------------------------------------------------------
+# deprecated per-call shims (kept for the pre-executor API)
 # ---------------------------------------------------------------------------
 
 def distributed_forward(plan: SoftPlan, f, mesh, axis=("data", "model"),
                         local_dwt=None):
     """FSOFT on a mesh: f (2B, 2B, 2B) beta-sharded -> packed coefficients
-    (K, B, 8) cluster-sharded.  `axis` may be one mesh axis name or a tuple
-    (the shard axes are flattened).  `local_dwt` swaps the device-local
-    contraction: a bare fn(d_shard, rhs2) (e.g. make_bucketed_local_dwt)
-    or a LocalDWT (e.g. make_fused_local_dwt, which drops the d-table
-    shard entirely)."""
+    (K, B, 8) cluster-sharded.
+
+    Deprecated shim over :class:`DistExecutor`: prefer
+    ``repro.plan(B, mesh=...).forward`` (or :func:`dist_executor`), which
+    build the shard specs and closures once instead of per call.
+    `local_dwt` swaps the device-local contraction (a bare
+    fn(d_shard, rhs2) or a LocalDWT); passing one builds an ephemeral
+    executor, exactly as the old per-call path did."""
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
-    n = int(np.prod([mesh.shape[a] for a in axis]))
-    check_mesh_compat(plan, n)
-    ld = _normalize_local_dwt(plan, local_dwt, "klj,kjc->klc")
+    return _shim_executor(plan, mesh, axis, local_dwt=local_dwt).forward(f)
 
-    def body(refl, sign, gm, gmp, w, scale, parity, f_loc, *dwt_ops):
-        S = fft_analysis(f_loc)                       # (2B, jloc, 2B)
-        Sm = S[gm, :, gmp]                            # (K, C, jloc)
-        rhs = Sm * (sign[..., None] * w[None, None, :])
-        rhs = jnp.stack([rhs.real, rhs.imag], -1)     # (K, C, jloc, 2)
-        rhs = jnp.swapaxes(rhs, 1, 2)                 # (K, jloc, C, 2)
-        K, jloc, C, _ = rhs.shape
-        rhs = jax.lax.all_to_all(rhs.reshape(K, jloc, 2 * C), axis,
-                                 split_axis=0, concat_axis=1, tiled=True)
-        rhs = rhs.reshape(K // n, jloc * n, C, 2)     # (Kloc, J, C, 2)
-        rhs = jnp.where(refl[:, None, :, None], rhs[:, ::-1], rhs)
-        out = ld.fn(*dwt_ops, rhs.reshape(*rhs.shape[:2], 2 * C))
-        out = out.reshape(*out.shape[:2], C, 2)
-        outc = out[..., 0] + 1j * out[..., 1]
-        return outc * (_refl_sign(refl, parity) * scale[None, :, None])
-
-    ax0 = P(axis if len(axis) > 1 else axis[0])
-    sharded = ld.shard_map()(
-        body, mesh=mesh,
-        in_specs=(ax0, P(), P(), P(), ax0, P(), P(),
-                  P(None, ax0[0], None)) + ld.specs(ax0),
-        out_specs=ax0,
-    )
-    return sharded(plan.reflected, plan.sign, plan.gather_m,
-                   plan.gather_mp, plan.w, plan.scale, plan.parity, f,
-                   *ld.operands)
-
-
-# ---------------------------------------------------------------------------
-# inverse
-# ---------------------------------------------------------------------------
 
 def distributed_inverse(plan: SoftPlan, packed, mesh, axis=("data", "model"),
                         local_idwt=None):
     """iFSOFT on a mesh: packed coefficients (K, B, 8) cluster-sharded ->
-    samples (2B, 2B, 2B) beta-sharded.  `local_idwt` swaps the device-local
-    contraction: a bare fn(d_shard, lhs2) or a LocalDWT (e.g.
-    make_fused_local_idwt, which drops the d-table shard entirely)."""
+    samples (2B, 2B, 2B) beta-sharded.  Deprecated shim over
+    :class:`DistExecutor`; see :func:`distributed_forward`."""
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
-    n = int(np.prod([mesh.shape[a] for a in axis]))
-    check_mesh_compat(plan, n)
-    B = plan.B
-    ld = _normalize_local_dwt(plan, local_idwt, "klj,klc->kjc")
-
-    def body(refl, sign_sh, sign, gm, gmp, parity, packed_loc, *idwt_ops):
-        # sign_sh: cluster-sharded (scales the local lhs);
-        # sign:    replicated (masks the global bin scatter after all-to-all)
-        lhs = packed_loc * (_refl_sign(refl, parity) * sign_sh[:, None, :])
-        lhs = jnp.stack([lhs.real, lhs.imag], -1)     # (Kloc, L, C, 2)
-        C = lhs.shape[2]
-        g = ld.fn(*idwt_ops, lhs.reshape(*lhs.shape[:2], 2 * C))
-        g = g.reshape(g.shape[0], g.shape[1], C, 2)   # (Kloc, J, C, 2)
-        g = jnp.where(refl[:, None, :, None], g[:, ::-1], g)
-        g = jax.lax.all_to_all(g.reshape(*g.shape[:2], 2 * C), axis,
-                               split_axis=1, concat_axis=0, tiled=True)
-        g = g.reshape(g.shape[0], g.shape[1], C, 2)   # (K, jloc, C, 2)
-        gc = g[..., 0] + 1j * g[..., 1]
-        # scatter member columns into FFT bins (unused slots -> trash bin 2B)
-        gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
-        gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
-        jloc = gc.shape[1]
-        buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gc.dtype)
-        vals = jnp.swapaxes(gc, 1, 2).reshape(-1, jloc)  # (K*C, jloc)
-        buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
-        return fft_synthesis(buf[: 2 * B, :, : 2 * B])
-
-    ax0 = P(axis if len(axis) > 1 else axis[0])
-    sharded = ld.shard_map()(
-        body, mesh=mesh,
-        in_specs=(ax0, ax0, P(), P(), P(), P(), ax0) + ld.specs(ax0),
-        out_specs=P(None, ax0[0], None),
-    )
-    return sharded(plan.reflected, plan.sign, plan.sign,
-                   plan.gather_m, plan.gather_mp, plan.parity, packed,
-                   *ld.operands)
+    return _shim_executor(plan, mesh, axis,
+                          local_idwt=local_idwt).inverse(packed)
 
 
 # ---------------------------------------------------------------------------
@@ -313,3 +501,13 @@ def dense_to_packed(plan: SoftPlan, fhat):
     fpad = jnp.pad(jnp.asarray(fhat), ((0, 0), (0, 1), (0, 1)))
     lhs = fpad[:, plan.scatter_m, plan.scatter_mp]    # (L, K, C)
     return jnp.moveaxis(lhs, 0, 1)                    # (K, L, C)
+
+
+def packed_to_dense_batch(plan: SoftPlan, packed):
+    """(V, K, L, C) packed lane stack -> (V, B, 2B-1, 2B-1) dense."""
+    return jax.vmap(partial(packed_to_dense, plan))(jnp.asarray(packed))
+
+
+def dense_to_packed_batch(plan: SoftPlan, fhat):
+    """(V, B, 2B-1, 2B-1) dense stack -> (V, K, L, C) packed."""
+    return jax.vmap(partial(dense_to_packed, plan))(jnp.asarray(fhat))

@@ -4,8 +4,11 @@ OpenFFT's lesson (arXiv:1501.07350): an exhaustive-but-cheap measured sweep
 over decompositions is what turns a parallel transform design into actual
 speedup.  This module times real kernel launches for a small candidate set
 of (tk, tl, tj, V) tilings and memoizes the winner on disk keyed by
-(B, dtype, backend, impl, V) -- one sweep per machine/shape, then every
-subsequent make_dwt_fn call reads the cache.
+(B, dtype, backend, impl, V, vmem_limit, n_shards) -- one sweep per
+machine/shape/mesh-decomposition, then every subsequent make_dwt_fn call
+reads the cache.  n_shards > 1 tunes the per-device cluster shard of a
+mesh plan (see repro.plan: mesh plans resolve their schedule through
+this key).
 
     from repro.kernels import autotune
     cfg = autotune.autotune_dwt(plan, impl="fused")      # {'tk': ..., ...}
@@ -104,6 +107,10 @@ def candidate_tiles(K: int, L: int, J: int, impl: str) -> list[dict]:
     grid schedules (dense/ragged) tile all three.
     """
     tks = _divisors_leq(K, (4, 8, 16, 32))
+    if tks == [1]:
+        # no primary tile divides K (common for per-device cluster shards
+        # of a mesh plan): fall back to the smaller divisors
+        tks = _divisors_leq(K, (2, 3, 6))
     if impl in ("onthefly", "fused"):
         return [{"tk": tk, "tl": L, "tj": J} for tk in tks]
     tls = _divisors_leq(L, (8, 16, 32, 64, 128), fallback=L)
@@ -121,17 +128,42 @@ def _time_fn(fn, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _key(plan, impl: str, V, limit: int) -> str:
+def _key(plan, impl: str, V, limit: int, n_shards: int = 1) -> str:
     # the VMEM ceiling is part of the key: a winner measured under a
     # tight $REPRO_VMEM_BYTES (guard skipped the wide-V candidates) must
     # not be served when the budget is back to normal, and vice versa.
+    # The mesh decomposition (n_shards) is part of the key too: the
+    # device-local problem is the kloc = K/n cluster shard, and OpenFFT's
+    # lesson is that the winning tile is decomposition-shape-specific.
     return (f"{impl}/B{plan.B}/K{plan.n_padded}/{jnp.dtype(plan.d.dtype).name}"
-            f"/{jax.default_backend()}/V{V}/M{limit}")
+            f"/{jax.default_backend()}/V{V}/M{limit}/S{n_shards}")
+
+
+def _local_shard_timer(plan, tk: int, n_shards: int, interpret):
+    """Timing closure for the device-local fused kernel of one cluster
+    shard: shard 0's seed/order block stands in for every device (the
+    shard-balanced order makes the blocks work-identical, and the l0s
+    schedule is the min over ALL shards by construction)."""
+    from repro.core import parallel  # deferred: core.parallel imports kernels
+
+    from . import dwt_fused as dfk
+
+    meta = parallel.fused_shard_meta(plan, n_shards, tk)
+    kloc = plan.n_padded // n_shards
+    seeds = meta.seeds[:kloc]
+    m, mp, cb, l0s = meta.m[:kloc], meta.mp[:kloc], meta.cb, meta.l0s
+
+    def fn(rhs):
+        return dfk.dwt_fused(seeds, m, mp, cb, rhs, l0s, B=plan.B, tk=tk,
+                             interpret=interpret)
+
+    return fn
 
 
 def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
                  refresh: bool = False, cache: str | os.PathLike | None = None,
-                 interpret=None, vmem_limit: int | None = None) -> dict:
+                 interpret=None, vmem_limit: int | None = None,
+                 n_shards: int = 1) -> dict:
     """Measure-and-cache the best (tk, tl, tj, V) for one schedule.
 
     Returns {"tk", "tl", "tj", "V", "per_transform_s"}.  Sweeps the
@@ -139,38 +171,63 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
     kernel lane axis; scored per transform so wider packing must EARN its
     place by amortizing launch + Wigner-generation cost).
 
+    n_shards > 1 tunes the MESH decomposition instead of the local
+    problem: candidates tile the per-device cluster shard (kloc = K/n),
+    and timing runs the fused device-local kernel exactly as the
+    shard_map body launches it (shard-balanced seed block + replicated
+    l0s schedule).  Winners are cached under a mesh-shape-specific key,
+    so every mesh shape earns its own sweep (the OpenFFT lesson:
+    decomposition-shape-specific tuning is where the speedup lives).
+    Only the recurrence family runs on-device in the sharded paths, so
+    n_shards > 1 requires impl in ("onthefly", "fused").
+
     Candidates whose static per-grid-step footprint exceeds the VMEM
     ceiling (vmem_limit, default :func:`vmem_limit_bytes`) are skipped
     BEFORE launch -- wide-V lane packing (V > 4) at large B would
     otherwise fail at compile time on hardware instead of gracefully
     losing the sweep.
     """
+    if n_shards > 1 and impl not in ("onthefly", "fused"):
+        raise ValueError(
+            f"per-mesh autotuning times the fused device-local kernel; "
+            f"impl must be 'onthefly' or 'fused', got {impl!r}")
     path = pathlib.Path(cache) if cache is not None else cache_path()
     store = _load_cache(path)
     limit = vmem_limit_bytes() if vmem_limit is None else vmem_limit
-    key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0], limit)
+    key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0], limit,
+               n_shards)
     if not refresh and key in store:
         return store[key]
 
     K, L, J = plan.d.shape
+    K_eff = K // n_shards       # the per-device cluster problem
     C = plan.gather_m.shape[1]
     itemsize = jnp.dtype(plan.d.dtype).itemsize
     rng = np.random.default_rng(0)
     best = None
     n_skipped = 0
     for V in Vs:
-        shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
-        rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
-        for tile in candidate_tiles(K, L, J, impl):
+        if n_shards > 1:
+            rhs = jnp.asarray(rng.normal(size=(K_eff, J, V * C * 2)),
+                              plan.d.dtype)
+        else:
+            shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
+            rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
+        for tile in candidate_tiles(K_eff, L, J, impl):
             if estimate_vmem_bytes(impl, L=L, J=J, C2=V * C * 2,
                                    itemsize=itemsize,
                                    **tile) > limit:
                 n_skipped += 1
                 continue
-            fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
-                                 batch=None if V == 1 else V, **tile)
             try:
-                t = _time_fn(lambda r: fn(plan, r), rhs, reps=reps) / V
+                if n_shards > 1:
+                    run = _local_shard_timer(plan, tile["tk"], n_shards,
+                                             interpret)
+                else:
+                    fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
+                                         batch=None if V == 1 else V, **tile)
+                    run = lambda r: fn(plan, r)   # noqa: E731
+                t = _time_fn(run, rhs, reps=reps) / V
             except Exception:   # tiling rejected by the kernel -> skip
                 continue
             if best is None or t < best["per_transform_s"]:

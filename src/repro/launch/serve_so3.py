@@ -34,6 +34,11 @@ def main(argv=None):
     ap.add_argument("--threaded", action="store_true",
                     help="background worker + jittered arrivals instead of "
                          "submit-all + drain")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard the engines over the first N devices "
+                         "(lane-packed sharded inverse; 0 = local plans; "
+                         "on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch to fake N devices)")
     args = ap.parse_args(argv)
 
     import jax
@@ -44,10 +49,24 @@ def main(argv=None):
     from repro.so3 import SO3Service, angle_error, s2
     from repro.so3.correlate import random_rotation
 
+    mesh = None
+    if args.mesh_shards > 0:
+        from repro.core.compat import make_mesh
+        if jax.device_count() < args.mesh_shards:
+            raise SystemExit(
+                f"--mesh-shards {args.mesh_shards} needs at least that many "
+                f"devices, found {jax.device_count()} (on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{args.mesh_shards})")
+        mesh = make_mesh((args.mesh_shards,), ("data",))
+        print(f"mesh: {args.mesh_shards} shards over axis 'data' "
+              f"(lane-packed sharded inverse)")
+
     lane_width = args.lane_width if args.lane_width > 0 else None
     svc = SO3Service(bandwidths=args.bandwidth, dtype=jnp.float64,
                      lane_width=lane_width, tk=args.tk,
-                     max_wait_ms=args.max_wait_ms)
+                     max_wait_ms=args.max_wait_ms, mesh=mesh,
+                     axis=("data",))
     warm = svc.warmup()
     for B, s in warm.items():
         eng = svc.engine(B)

@@ -23,10 +23,15 @@ measured on-disk-cached sweep under ``tune="measure"`` (or
 ``$REPRO_PLAN_TUNE=measure``) -- then materializes and owns every
 cached resource: the :class:`~repro.core.batched.SoftPlan` (Wigner
 table + cluster metadata), the single and V-lane-batched kernel
-closures, and (for mesh plans) the shard metadata consumed by
-:mod:`repro.core.parallel`.  Downstream layers (``core.batched``,
-``core.parallel``, ``repro.so3``) are engines behind the plan; they
-remain importable for kernel-level work and as deprecation shims.
+closures, and (for mesh plans) the shard metadata plus the
+mesh-resident :class:`repro.core.parallel.DistExecutor` (shard specs,
+jitted shard_map callables, lane-packed batch bodies -- one all-to-all
+per V-wide chunk).  Mesh plans carry their own schedule key: tiles and
+lane width resolve against the per-device cluster shard, statically or
+through the autotuner's per-mesh measured sweep.  Downstream layers
+(``core.batched``, ``core.parallel``, ``repro.so3``) are engines behind
+the plan; they remain importable for kernel-level work and as
+deprecation shims.
 
 Plans are memoized: ``plan(...)`` with an identical configuration
 returns the SAME ``Transform`` object (see :func:`cache_stats`), so a
@@ -66,6 +71,11 @@ class Schedule:
     ``source`` records how it was picked: "explicit" (caller fixed impl,
     V and tiles), "static" (VMEM-guard estimator), or "measured"
     (:func:`repro.kernels.autotune.autotune_dwt` sweep, on-disk cached).
+
+    ``n_shards`` is the mesh key: schedules of mesh plans are resolved
+    against the per-device cluster shard (kloc = K/n_shards) -- tiles
+    must divide the LOCAL cluster count and the VMEM guard sees the
+    local footprint -- so every mesh shape gets its own (tk, tl, tj, V).
     """
 
     impl: str               # executor schedule (one of IMPLS)
@@ -76,6 +86,7 @@ class Schedule:
     source: str             # "explicit" | "static" | "measured"
     vmem_bytes: int         # static per-grid-step footprint estimate
     vmem_limit: int         # budget the schedule was resolved under
+    n_shards: int = 1       # mesh decomposition the schedule was tuned for
     per_transform_s: float | None = None   # measured (tune="measure") only
 
     @property
@@ -97,20 +108,35 @@ def _default_tk(K: int) -> int:
     return max(t for t in (1, 2, 4, _DEF_TK) if K % t == 0)
 
 
+def _shard_tk(tk: int, K_local: int) -> int:
+    """Largest cluster tile <= tk dividing the per-device cluster count."""
+    return max(t for t in range(1, min(tk, K_local) + 1) if K_local % t == 0)
+
+
 def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
-                     limit: int) -> Schedule:
-    """Largest lane width under the VMEM guard, default tiles."""
+                     limit: int, n_shards: int = 1) -> Schedule:
+    """Largest lane width under the VMEM guard, default tiles.
+
+    Mesh plans (n_shards > 1) resolve against the per-device cluster
+    shard: the tile must divide kloc = K/n_shards (that is the kernel
+    the shard_map body launches), and the VMEM estimate therefore
+    reflects the per-device grid step, not the unsharded one.
+    """
     K, L, J = soft_plan.d.shape
+    K_local = K // n_shards
     C = soft_plan.gather_m.shape[1]
     itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
     impl = "fused" if impl == "auto" else impl
-    tk = _default_tk(K) if tk is None else tk
+    if n_shards > 1:    # tiles must divide the per-device cluster count
+        tk = _shard_tk(_DEF_TK if tk is None else tk, K_local)
+    elif tk is None:
+        tk = _default_tk(K_local)
     tl = L if tl is None else tl
     tj = J if tj is None else tj
     if impl == "reference":     # pure jnp: no kernel, no VMEM constraint
         source = "static" if V == "auto" else "explicit"
         V = 4 if V == "auto" else V
-        return Schedule(impl, V, tk, tl, tj, source, 0, limit)
+        return Schedule(impl, V, tk, tl, tj, source, 0, limit, n_shards)
 
     def est(v):
         return autotune.estimate_vmem_bytes(impl, L=L, J=J, C2=v * C * 2,
@@ -133,19 +159,28 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
                 f"explicit schedule impl={impl} V={V} tk={tk} needs "
                 f"{est(V)} bytes of VMEM per grid step, over the {limit} "
                 f"budget (raise $REPRO_VMEM_BYTES or vmem_budget)")
-    return Schedule(impl, V, tk, tl, tj, source, est(V), limit)
+    return Schedule(impl, V, tk, tl, tj, source, est(V), limit, n_shards)
 
 
 def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
-                       reps: int, cache) -> Schedule:
-    """Resolve via the measured autotune sweep (disk-cached winners)."""
-    impls = AUTO_IMPL_CANDIDATES if impl == "auto" else (impl,)
+                       reps: int, cache, n_shards: int = 1) -> Schedule:
+    """Resolve via the measured autotune sweep (disk-cached winners).
+
+    Mesh plans sweep the per-device cluster shard (autotune_dwt's
+    n_shards key): the device-local kernel on a mesh is always the fused
+    family, so "auto" collapses to one fused sweep instead of timing the
+    same local kernel twice.
+    """
+    if n_shards > 1:
+        impls = ("fused",) if impl == "auto" else (impl,)
+    else:
+        impls = AUTO_IMPL_CANDIDATES if impl == "auto" else (impl,)
     Vs = AUTO_V_CANDIDATES if V == "auto" else (V,)
     best, best_impl = None, None
     for im in impls:
         cfg = autotune.autotune_dwt(soft_plan, im, Vs=Vs, reps=reps,
                                     interpret=interpret, vmem_limit=limit,
-                                    cache=cache)
+                                    cache=cache, n_shards=n_shards)
         if best is None or cfg["per_transform_s"] < best["per_transform_s"]:
             best, best_impl = cfg, im
     K, L, J = soft_plan.d.shape
@@ -155,7 +190,7 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
         tl=best["tl"], tj=best["tj"],
         itemsize=jnp.dtype(soft_plan.d.dtype).itemsize)
     return Schedule(best_impl, best["V"], best["tk"], best["tl"], best["tj"],
-                    "measured", est, limit,
+                    "measured", est, limit, n_shards,
                     per_transform_s=best["per_transform_s"])
 
 
@@ -216,9 +251,12 @@ class Transform:
         self.stats = dict(launches=0, transforms=0, padded_lanes=0)
 
     def describe(self) -> dict:
-        """One flat dict for logs / benchmark rows."""
+        """One flat dict for logs / benchmark rows.  Mesh plans also
+        report the shard axis names, the per-device shard counts
+        (clusters and beta rows), and the resolved per-device lane
+        width."""
         s = self.schedule
-        return {
+        out = {
             "B": self.B, "dtype": jnp.dtype(self.dtype).name,
             "impl": s.impl, "V": s.V, "tk": s.tk, "tl": s.tl, "tj": s.tj,
             "source": s.source, "vmem_bytes": s.vmem_bytes,
@@ -226,6 +264,15 @@ class Transform:
             "n_clusters": self.soft_plan.n_clusters,
             "n_padded": self.soft_plan.n_padded,
         }
+        if self.mesh is not None:
+            out.update({
+                "mesh_axes": list(self.axis),
+                "mesh_shape": [int(self.mesh.shape[a]) for a in self.axis],
+                "shard_clusters": self.soft_plan.n_padded // self.n_shards,
+                "shard_beta": 2 * self.B // self.n_shards,
+                "lane_width": s.V,
+            })
+        return out
 
     # -- owned resources (built once, cached on the Transform) ----------
 
@@ -275,8 +322,7 @@ class Transform:
         if self.mesh is None:
             raise ValueError("shard_meta() on a plan built without a mesh")
         kloc = self.soft_plan.n_padded // self.n_shards
-        tk = max(t for t in range(1, min(self.schedule.tk, kloc) + 1)
-                 if kloc % t == 0)
+        tk = _shard_tk(self.schedule.tk, kloc)
         return self._res("shard_meta", lambda: parallel.fused_shard_meta(
             self.soft_plan, self.n_shards, tk))
 
@@ -303,6 +349,18 @@ class Transform:
             return None          # dense einsum (no bucketed inverse kernel)
         return self._res("local_idwt", build)
 
+    def executor(self) -> "parallel.DistExecutor":
+        """The mesh-resident :class:`repro.core.parallel.DistExecutor` of
+        this plan: shard specs, sign/reflection tables, local kernel
+        closures, and jitted shard_map callables, built ONCE per (plan,
+        mesh) and reused by every sharded executor call."""
+        if self.mesh is None:
+            raise ValueError("executor() on a plan built without a mesh")
+        return self._res("executor", lambda: parallel.DistExecutor(
+            self.soft_plan, self.mesh, self.axis,
+            lane_width=self.schedule.V,
+            local_dwt=self._local_dwt(), local_idwt=self._local_idwt()))
+
     # -- executors: single transform ------------------------------------
 
     def forward(self, f, *, stats=None):
@@ -316,9 +374,7 @@ class Transform:
 
     def _forward_impl(self, f):
         if self.mesh is not None:
-            packed = parallel.distributed_forward(
-                self.soft_plan, f, self.mesh, self.axis,
-                local_dwt=self._local_dwt())
+            packed = self.executor().forward(f)
             return parallel.packed_to_dense(self.soft_plan, packed)
         return batched.forward_clustered(self.soft_plan, f,
                                          dwt_fn=self.dwt_fn)
@@ -333,9 +389,7 @@ class Transform:
     def _inverse_impl(self, fhat):
         if self.mesh is not None:
             packed = parallel.dense_to_packed(self.soft_plan, fhat)
-            return parallel.distributed_inverse(
-                self.soft_plan, packed, self.mesh, self.axis,
-                local_idwt=self._local_idwt())
+            return self.executor().inverse(packed)
         return batched.inverse_clustered(self.soft_plan, fhat,
                                          idwt_fn=self.idwt_fn)
 
@@ -345,7 +399,9 @@ class Transform:
         """FSOFT of any request count: (n, 2B, 2B, 2B) -> (n, B, 2B-1,
         2B-1).  Chunks of V ride one lane-packed kernel launch; the final
         partial chunk is zero-padded so every launch reuses the single
-        compiled kernel shape."""
+        compiled kernel shape.  On mesh plans each chunk is ONE
+        lane-packed sharded launch (one all-to-all for all V lanes) via
+        the plan's :meth:`executor`."""
         return self._batch(fs, batched.forward_clustered_batch,
                            lambda: self.dwt_fn_batch, "dwt_fn",
                            out_shape=(self.B, 2 * self.B - 1, 2 * self.B - 1),
@@ -364,12 +420,13 @@ class Transform:
         n_total = xs.shape[0]
         if n_total == 0:
             return jnp.zeros((0,) + out_shape, self.cdtype)
-        if self.mesh is not None:     # sharded plans serve batches serially
-            impl = (self._forward_impl if fn_kw == "dwt_fn"
-                    else self._inverse_impl)
-            stats["launches"] += n_total
-            stats["transforms"] += n_total
-            return jnp.stack([impl(x) for x in xs])
+        if self.mesh is not None:     # lane-packed sharded launches
+            ex = self.executor()
+            if fn_kw == "dwt_fn":
+                packed = ex.forward_batch(xs, stats=stats)
+                return parallel.packed_to_dense_batch(self.soft_plan, packed)
+            packed = parallel.dense_to_packed_batch(self.soft_plan, xs)
+            return ex.inverse_batch(packed, stats=stats)
         V = self.schedule.V
         fn = get_fn()
         outs = []
@@ -410,17 +467,23 @@ class Transform:
 
 _CACHE: collections.OrderedDict = collections.OrderedDict()
 _CACHE_MAX = 16
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "mesh_hits": 0, "mesh_misses": 0}
 
 
 def clear_cache() -> None:
     """Drop memoized Transforms (testing / benchmarking hook)."""
     _CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
 
 
 def cache_stats() -> dict:
-    return dict(_CACHE_STATS, size=len(_CACHE))
+    """Planner cache counters.  hits/misses count every lookup;
+    mesh_hits/mesh_misses count the mesh-planned subset separately, and
+    mesh_size is how many of the cached Transforms hold a mesh."""
+    return dict(_CACHE_STATS, size=len(_CACHE),
+                mesh_size=sum(1 for t in _CACHE.values()
+                              if t.mesh is not None))
 
 
 def _mesh_key(mesh):
@@ -470,28 +533,51 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
+        if mesh is not None:
+            _CACHE_STATS["mesh_hits"] += 1
         _CACHE.move_to_end(key)
         return hit
     _CACHE_STATS["misses"] += 1
+    if mesh is not None:
+        _CACHE_STATS["mesh_misses"] += 1
 
     base_tk = tk if tk is not None else _DEF_TK
     if mesh is not None:
         n_shards = int(np.prod([mesh.shape[a] for a in axis]))
-        order = batched.shard_balanced_order(
-            clusters_mod.build_cluster_table(B).rep[:, 0], n_shards)
-        soft_plan = batched.build_plan(B, dtype=dtype,
-                                       pad_to=base_tk * n_shards, order=order)
+        if (2 * B) % n_shards:
+            raise ValueError(
+                f"mesh with {n_shards} shards cannot split the beta axis: "
+                f"2B = {2 * B} is not divisible by {n_shards} (use a mesh "
+                f"whose shard-axis product divides {2 * B})")
+        # the planner auto-pads the cluster axis to the mesh size, so
+        # check_mesh_compat can never fail at execute time on a plan path.
+        # pad_to = n_shards keeps the padding minimal (< n_shards zero
+        # rows; the schedule clamps tk to the per-device count instead of
+        # padding whole tk*n blocks, which could idle a shard), and the
+        # shard-balanced order is dealt over the PADDED count so every
+        # shard's block stays extent-sorted (maximal ragged truncation)
+        l_start = clusters_mod.build_cluster_table(B).rep[:, 0]
+        n_padded = -(-len(l_start) // n_shards) * n_shards
+        order = batched.shard_balanced_order(l_start, n_shards,
+                                             n_padded=n_padded)
+        soft_plan = batched.build_plan(B, dtype=dtype, pad_to=n_shards,
+                                       order=order)
         parallel.check_mesh_compat(soft_plan, n_shards)
     else:
         n_shards = 1
         soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk)
 
-    if mode == "measure" and impl != "reference" \
+    # mesh plans resolve (tk, tl, tj, V) against the per-device shard:
+    # the measured sweep exists only for the fused device-local kernel
+    # family, so other impls fall back to the static VMEM guard
+    measurable = impl in ("auto", "fused", "onthefly") or n_shards == 1
+    if mode == "measure" and impl != "reference" and measurable \
             and tk is None and tl is None and tj is None:
         schedule = _measured_schedule(soft_plan, impl, V, limit, interpret,
-                                      tune_reps, tune_cache)
+                                      tune_reps, tune_cache, n_shards)
     else:
-        schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit)
+        schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit,
+                                    n_shards)
 
     t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
                   axis=axis if mesh is not None else None,

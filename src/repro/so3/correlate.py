@@ -151,11 +151,20 @@ class CorrelationEngine:
     a thin shim: it builds (or fetches, via the plan cache) the
     equivalent Transform.  ``lane_width=None`` takes V from the plan's
     autotune/VMEM-guard resolution instead of a hard-coded default.
+
+    Distributed matching: hand the engine a mesh plan (``repro.plan(B,
+    mesh=...).engine()``, or ``mesh=``/``axis=`` in the shim form) and
+    every correlation batch executes on the plan's lane-packed SHARDED
+    inverse -- the outer-product coefficient stacks of the template bank
+    are cluster-sharded over the mesh and V templates ride each sharded
+    launch (one all-to-all per chunk), so a bank match runs the paper's
+    exclusive-memory-range decomposition end to end.
     """
 
     def __init__(self, B: int | None = None, *, transform=None,
                  dtype=jnp.float64, lane_width: int | None = None,
-                 impl: str = "fused", tk: int | None = None, interpret=None):
+                 impl: str = "fused", tk: int | None = None, interpret=None,
+                 mesh=None, axis=("data", "model")):
         if transform is None:
             if B is None:
                 raise ValueError("CorrelationEngine needs B or transform")
@@ -166,7 +175,7 @@ class CorrelationEngine:
             transform = plan_mod.plan(
                 B, dtype=dtype, impl=impl,
                 V="auto" if lane_width is None else lane_width,
-                tk=tk, interpret=interpret)
+                tk=tk, interpret=interpret, mesh=mesh, axis=axis)
         elif B is not None and B != transform.B:
             raise ValueError(f"B={B} conflicts with transform.B="
                              f"{transform.B}")
@@ -211,9 +220,11 @@ class CorrelationEngine:
         Chunks of ``lane_width`` requests run as ONE lane-packed iFSOFT
         launch via the plan's ``inverse_batch`` executor; the final
         partial chunk is zero-padded to the lane width so every launch
-        reuses the single compiled kernel shape.  Launch accounting lands
-        in THIS engine's ``stats`` (the plan is shared; its counters are
-        not ours).
+        reuses the single compiled kernel shape.  On a mesh plan each
+        chunk is one lane-packed SHARDED launch (coefficient stacks
+        cluster-sharded, one all-to-all for all V lanes).  Launch
+        accounting lands in THIS engine's ``stats`` (the plan is shared;
+        its counters are not ours).
         """
         B = self.B
         if not len(fs):

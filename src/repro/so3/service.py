@@ -66,14 +66,20 @@ class SO3Service:
     def __init__(self, bandwidths=(8,), *, dtype=jnp.float64,
                  lane_width: int | None = 4, impl: str = "fused",
                  tk: int | None = 8, interpret=None,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, mesh=None,
+                 axis=("data", "model")):
         """lane_width=None takes V per bandwidth from the plan's autotune
-        / VMEM-guard resolution (repro.plan) instead of a fixed width."""
+        / VMEM-guard resolution (repro.plan) instead of a fixed width.
+
+        mesh/axis plan the engines on a device mesh: every packed launch
+        then runs the lane-packed SHARDED inverse (template stacks
+        cluster-sharded, one all-to-all per launch group)."""
         self.bandwidths = tuple(bandwidths)
         self.lane_width = lane_width
         self.max_wait_ms = max_wait_ms
         self._engine_kw = dict(dtype=dtype, impl=impl, tk=tk,
-                               interpret=interpret, lane_width=lane_width)
+                               interpret=interpret, lane_width=lane_width,
+                               mesh=mesh, axis=axis)
         self._engines: dict[int, CorrelationEngine] = {}
         self._queues: dict[int, collections.deque] = {}
         self._lock = threading.Lock()

@@ -1,0 +1,168 @@
+"""Distributed-layer units that need NO fake multi-device subprocess:
+packed <-> dense coefficient-layout bijection, shard-layout invariants
+(shard-balanced order, ShardMeta l0 schedules), and the mesh-resident
+DistExecutor on a trivial 1-shard mesh (the shard_map machinery runs for
+real; multi-device equivalence lives in tests/progs/dist_plan.py)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import batched, clusters as clusters_mod, parallel, soft
+from repro.core.compat import make_mesh
+
+
+def _balanced_plan(B, n_shards, pad_to=None):
+    """Mirror of the planner's mesh path: minimal padding (pad_to =
+    n_shards) and the pad-aware shard-balanced deal."""
+    l_start = clusters_mod.build_cluster_table(B).rep[:, 0]
+    pad_to = pad_to or n_shards
+    n_padded = -(-len(l_start) // pad_to) * pad_to
+    order = batched.shard_balanced_order(l_start, n_shards,
+                                         n_padded=n_padded)
+    return batched.build_plan(B, pad_to=pad_to, order=order)
+
+
+# ---------------------------------------------------------------------------
+# packed <-> dense layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [4, 8])
+def test_packed_dense_roundtrip(B):
+    plan = batched.build_plan(B, pad_to=4)
+    fhat = soft.random_coeffs(B, seed=3)
+    packed = parallel.dense_to_packed(plan, fhat)
+    assert packed.shape == (plan.n_padded, B, plan.gather_m.shape[1])
+    back = np.asarray(parallel.packed_to_dense(plan, packed))
+    np.testing.assert_array_equal(back, fhat)
+    # and the packed layout itself survives a dense round (bijection on
+    # the cells the plan's scatter tables address)
+    packed2 = parallel.dense_to_packed(
+        plan, parallel.packed_to_dense(plan, packed))
+    np.testing.assert_array_equal(np.asarray(packed2), np.asarray(packed))
+
+
+def test_packed_dense_batch_wrappers_match_singles():
+    B, n = 8, 3
+    plan = batched.build_plan(B, pad_to=4)
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, seed=s))
+                       for s in range(n)])
+    packed = parallel.dense_to_packed_batch(plan, fhats)
+    for i in range(n):
+        np.testing.assert_array_equal(
+            np.asarray(packed[i]),
+            np.asarray(parallel.dense_to_packed(plan, fhats[i])))
+    dense = parallel.packed_to_dense_batch(plan, packed)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(fhats))
+
+
+# ---------------------------------------------------------------------------
+# shard-layout invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_shard_balanced_layout_invariants(n_shards):
+    """n_shards = 8 does not divide the 36 clusters at B = 8, so it
+    exercises the pad-aware deal (pad rows land in the last hand)."""
+    B = 8
+    plan = _balanced_plan(B, n_shards)
+    per_shard = batched.shard_lstart(plan, n_shards)
+    assert per_shard.shape == (n_shards, plan.n_padded // n_shards)
+    # minimal padding: fewer than n_shards zero rows
+    assert plan.n_padded - plan.n_clusters < n_shards
+    # (a) extent-sorted WITHIN each shard: ascending l-start rows, so
+    # every local block supports bucketed/ragged l-truncation
+    for s in range(n_shards):
+        assert (np.diff(per_shard[s]) >= 0).all(), f"shard {s} unsorted"
+    # (b) work-balanced ACROSS shards: total contraction rows per shard
+    # (sum of B - l_start) within one max-cluster-extent of each other.
+    # Pad rows are contiguous at the global end, so only the LAST
+    # shard(s) can hold them -- those trade work for padding by design
+    # and are excluded from the strict bound (their work can only be
+    # lower, never higher).
+    kloc = plan.n_padded // n_shards
+    n_full = n_shards - -(-(plan.n_padded - plan.n_clusters) // kloc)
+    work = (B - per_shard).sum(axis=1)
+    assert work.max() - work[:n_full].min() <= B
+    assert work[n_full:].max(initial=0) <= work.max()
+
+
+@pytest.mark.parametrize("tk", [1, 2, 3])
+def test_shard_meta_l0s_safe_for_every_shard(tk):
+    B, n_shards = 8, 2
+    plan = _balanced_plan(B, n_shards)
+    meta = parallel.fused_shard_meta(plan, n_shards, tk)
+    kloc = plan.n_padded // n_shards
+    assert meta.tk == tk and len(meta.l0s) == kloc // tk
+    per_shard = batched.shard_lstart(plan, n_shards)
+    # the replicated per-tile l0 schedule must truncate NO shard's rows:
+    # l0s[t] <= min over shards of that tile's l-starts
+    tile_mins = per_shard.reshape(n_shards, kloc // tk, tk).min(axis=(0, 2))
+    assert (meta.l0s <= tile_mins).all()
+    # memoized by (plan, n_shards, tk) identity
+    assert parallel.fused_shard_meta(plan, n_shards, tk) is meta
+
+
+def test_shard_meta_rejects_nondividing_tile():
+    plan = _balanced_plan(8, 2)
+    kloc = plan.n_padded // 2
+    bad = kloc + 1
+    with pytest.raises(ValueError, match="not divisible"):
+        parallel.fused_shard_meta(plan, 2, bad)
+
+
+# ---------------------------------------------------------------------------
+# DistExecutor on a 1-shard mesh (real shard_map, no fake devices)
+# ---------------------------------------------------------------------------
+
+def test_dist_executor_single_shard_matches_local():
+    B = 8
+    mesh = make_mesh((1,), ("data",))
+    plan = _balanced_plan(B, 1, pad_to=4)
+    fhat = soft.random_coeffs(B, seed=5)
+
+    ex = parallel.DistExecutor(plan, mesh, ("data",), lane_width=2)
+    f_ref = np.asarray(batched.inverse_clustered(plan, fhat))
+    f_ex = np.asarray(ex.inverse(parallel.dense_to_packed(plan, fhat)))
+    np.testing.assert_allclose(f_ex, f_ref, rtol=1e-11, atol=1e-11)
+    packed_back = ex.forward(f_ex)
+    back = np.asarray(parallel.packed_to_dense(plan, packed_back))
+    np.testing.assert_allclose(
+        back, np.asarray(batched.forward_clustered(plan, jnp.asarray(f_ref))),
+        rtol=1e-11, atol=1e-11)
+
+    # lane-packed batch: 3 transforms on lane_width=2 -> 2 launches, the
+    # partial chunk zero-padded; results match the per-item path
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, seed=s))
+                       for s in range(3)])
+    stats = dict(launches=0, transforms=0, padded_lanes=0)
+    fb = np.asarray(ex.inverse_batch(
+        parallel.dense_to_packed_batch(plan, fhats), stats=stats))
+    assert stats == {"launches": 2, "transforms": 3, "padded_lanes": 1}
+    for i in range(3):
+        np.testing.assert_allclose(
+            fb[i], np.asarray(batched.inverse_clustered(plan, fhats[i])),
+            rtol=1e-11, atol=1e-11)
+
+
+def test_dist_executor_memoized_and_validates():
+    B = 8
+    mesh = make_mesh((1,), ("data",))
+    plan = _balanced_plan(B, 1, pad_to=4)
+    assert parallel.dist_executor(plan, mesh, ("data",)) is \
+        parallel.dist_executor(plan, mesh, ("data",))
+    with pytest.raises(ValueError, match="lane_width"):
+        parallel.DistExecutor(plan, mesh, ("data",), lane_width=0)
+    # empty batches short-circuit with the right output shapes
+    ex = parallel.dist_executor(plan, mesh, ("data",))
+    C = plan.gather_m.shape[1]
+    assert ex.forward_batch(np.zeros((0, 2 * B, 2 * B, 2 * B))).shape == \
+        (0, plan.n_padded, B, C)
+    assert ex.inverse_batch(np.zeros((0, plan.n_padded, B, C))).shape == \
+        (0, 2 * B, 2 * B, 2 * B)
+
+
+def test_autotune_mesh_key_requires_recurrence_impl():
+    from repro.kernels import autotune
+    plan = _balanced_plan(8, 2)
+    with pytest.raises(ValueError, match="onthefly"):
+        autotune.autotune_dwt(plan, "dense", n_shards=2)
