@@ -9,7 +9,8 @@ Sections:
   kernel_schedule  folded-attention / ragged-DWT grid savings
   dwt_schedules    dense/ragged/onthefly/fused DWT kernels + V batching
   plan             repro.plan planner: build time, cache hits, executors
-  distributed      serial-loop vs lane-packed sharded batches (2-dev mesh)
+  distributed      serial-loop vs lane-packed sharded batches, overlap
+                   off vs pipelined rows (2-dev mesh)
   correlation      SO(3) rotational matching: bank + service on fused lanes
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts

@@ -28,6 +28,24 @@ all-to-all and one local-kernel launch for the whole stack -- V
 transforms cost one collective instead of V (``forward_batch`` /
 ``inverse_batch`` chunk arbitrary request counts onto that path).
 
+Communication/compute overlap (``overlap="pipelined"``): the batch
+executors can run their ceil(n/V) V-chunks through a double-buffered
+pipeline inside ONE ``shard_map`` call instead of a Python loop of
+serial launches.  A ``jax.lax.fori_loop`` carries a two-slot buffer:
+step *i* runs chunk *i*'s device-local DWT/iDWT kernel on the slot the
+previous step filled while chunk *i+1*'s all-to-all is staged into the
+other slot.  The collective and the kernel in one step touch different
+slots and carry no data dependence, so XLA's latency-hiding scheduler
+is free to keep the interconnect and the MXU busy simultaneously --
+the OpenFFT/P3DFFT communication-overlap lever.  :func:`pipeline_steps`
+/ :func:`pipeline_slots` describe the static schedule (prologue,
+steady-state, epilogue) for tests and benchmarks; ``overlap="off"``
+keeps the serial per-chunk launches (the numerical results are
+identical -- the pipeline reorders work, not arithmetic).  The mode is
+normally resolved by the planner (``Schedule.overlap``, see
+:mod:`repro.plan.transform` and :mod:`repro.kernels.autotune`) and can
+be overridden per call: ``t.executor().inverse_batch(x, overlap="off")``.
+
 Coefficients live in the *packed* layout out[k, l, c] (cluster-sharded,
 member slot c), which the inverse consumes directly -- a distributed
 roundtrip therefore needs exactly two all-to-alls and no host gather.
@@ -50,7 +68,6 @@ call its executors instead::
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from functools import partial
@@ -70,7 +87,64 @@ __all__ = [
     "LocalDWT", "ShardMeta", "fused_shard_meta", "make_bucketed_local_dwt",
     "make_fused_local_dwt", "make_fused_local_idwt", "packed_to_dense",
     "dense_to_packed", "packed_to_dense_batch", "dense_to_packed_batch",
+    "OVERLAP_MODES", "pipeline_steps", "pipeline_slots",
 ]
+
+# batch-executor execution modes: "off" launches the V-chunks serially
+# (one jitted shard_map call per chunk), "pipelined" runs them through
+# the double-buffered fori_loop pipeline (one call for the whole batch,
+# chunk i+1's all-to-all in flight while chunk i's local kernel runs)
+OVERLAP_MODES = ("off", "pipelined")
+
+
+def check_overlap_mode(overlap: str) -> str:
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(f"overlap must be one of {OVERLAP_MODES}, "
+                         f"got {overlap!r}")
+    return overlap
+
+
+def pipeline_steps(n_chunks: int) -> list[tuple]:
+    """Static step schedule of the double-buffered pipeline over
+    ``n_chunks`` V-chunks, as executed by the pipelined shard_map bodies.
+
+    Each step is a tuple of ("collective", chunk) / ("compute", chunk)
+    halves that execute CONCURRENTLY (no data dependence between them):
+
+      step 0                (("collective", 0),)              prologue
+      step 1..n_chunks-1    (("collective", i), ("compute", i-1))
+      step n_chunks         (("compute", n_chunks-1),)        epilogue
+
+    Every interior step therefore keeps one chunk's all-to-all in flight
+    while the previous chunk's device-local kernel runs -- the schedule
+    the structural overlap checks (benchmarks/distributed.py,
+    tests/test_parallel.py) assert on.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    steps: list[tuple] = [(("collective", 0),)]
+    steps += [(("collective", i + 1), ("compute", i))
+              for i in range(n_chunks - 1)]
+    steps.append((("compute", n_chunks - 1),))
+    return steps
+
+
+def pipeline_slots(n_chunks: int) -> list[tuple]:
+    """Two-slot buffer index rotation behind :func:`pipeline_steps`:
+    per step, (read_slot, write_slot) of the fori_loop-carried buffer
+    (None for the halves a prologue/epilogue step does not have).
+
+    Chunk i lives in slot i % 2; a step reads chunk i-1 from slot
+    (i-1) % 2 while the collective writes chunk i into slot i % 2 --
+    always the OTHER slot, so the staged all-to-all never clobbers the
+    operand of the kernel launch it overlaps with.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    slots: list[tuple] = [(None, 0)]
+    slots += [((i % 2), (i + 1) % 2) for i in range(n_chunks - 1)]
+    slots.append(((n_chunks - 1) % 2, None))
+    return slots
 
 
 def check_mesh_compat(plan: SoftPlan, n_shards: int) -> None:
@@ -258,10 +332,20 @@ class DistExecutor:
     each on-the-fly Wigner row once per V transforms and the collective
     payload per transform is unchanged while the collective COUNT drops
     V-fold.
+
+    ``overlap`` sets the default batch execution mode (:data:`
+    OVERLAP_MODES`): "off" launches the ceil(n/V) chunks serially;
+    "pipelined" folds them into one shard_map call whose fori_loop
+    carries a two-slot buffer, so chunk i's local kernel overlaps chunk
+    i+1's all-to-all (see :func:`pipeline_steps`).  The batch executors
+    accept a per-call ``overlap=`` override; ``forward_lanes`` /
+    ``inverse_lanes`` are the single-chunk primitive the pipeline is
+    built from and have no mode of their own.
     """
 
     def __init__(self, plan: SoftPlan, mesh, axis=("data", "model"), *,
-                 lane_width: int = 1, local_dwt=None, local_idwt=None):
+                 lane_width: int = 1, local_dwt=None, local_idwt=None,
+                 overlap: str = "off"):
         self.plan = plan
         self.mesh = mesh
         self.axis = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -270,6 +354,7 @@ class DistExecutor:
         if lane_width < 1:
             raise ValueError(f"lane_width must be >= 1, got {lane_width}")
         self.lane_width = int(lane_width)
+        self.overlap = check_overlap_mode(overlap)
         self._ld = _normalize_local_dwt(plan, local_dwt, "klj,kjc->klc")
         self._lid = _normalize_local_dwt(plan, local_idwt, "klj,klc->kjc")
         self._calls: dict = {}
@@ -280,18 +365,28 @@ class DistExecutor:
         return self.axis if len(self.axis) > 1 else self.axis[0]
 
     # -- sharded callables (built once, jitted, cached) -----------------
+    #
+    # Both directions decompose into three stages shared by the serial
+    # (one V-chunk per call) and pipelined (fori_loop over chunks,
+    # two-slot buffer) bodies:
+    #
+    #   forward:  stage1 beta-local FFT+gather -> all-to-all -> stage2
+    #             local DWT kernel + sign/scale postprocess
+    #   inverse:  stage1 signs + local iDWT kernel + reflection flip ->
+    #             all-to-all -> stage2 bin scatter + FFT synthesis
+    #
+    # The collective always sits between a compute stage it does NOT
+    # depend on for the NEIGHBORING chunk -- that independence is what
+    # the pipelined bodies exploit.
 
-    def _forward_call(self):
-        fn = self._calls.get("fwd")
-        if fn is not None:
-            return fn
+    def _forward_stages(self, refl, sign, gm, gmp, w, scale, parity,
+                        dwt_ops):
         axis, n, ld = self.axis, self.n_shards, self._ld
-        ax0 = P(self._shard)
+        C = self.plan.gather_m.shape[1]
 
-        def body(refl, sign, gm, gmp, w, scale, parity, f_loc, *dwt_ops):
+        def stage1(f_loc):
             # f_loc: (V, 2B, jloc, 2B) lane stack of beta shards;
-            # sign/gm/gmp replicated (pre-reshard, full K), w beta-local,
-            # refl/scale applied post-reshard on the cluster shard
+            # sign/gm/gmp replicated (pre-reshard, full K), w beta-local
             S = jax.vmap(fft_analysis)(f_loc)         # (V, 2B, jloc, 2B)
 
             def gather(s):
@@ -301,19 +396,92 @@ class DistExecutor:
                 return jnp.swapaxes(r, 1, 2)          # (K, jloc, C, 2)
 
             rhs = jax.vmap(gather)(S)                 # (V, K, jloc, C, 2)
-            V, K, jloc, C, _ = rhs.shape
+            V, K, jloc = rhs.shape[:3]
             rhs = jnp.moveaxis(rhs, 0, 2)             # (K, jloc, V, C, 2)
-            # ONE all-to-all reshards all V lanes together
-            rhs = jax.lax.all_to_all(rhs.reshape(K, jloc, V * C * 2), axis,
-                                     split_axis=0, concat_axis=1, tiled=True)
-            rhs = rhs.reshape(K // n, jloc * n, V, C, 2)
+            return rhs.reshape(K, jloc, V * C * 2)
+
+        def reshard(rhs):
+            # ONE all-to-all reshards all V lanes together:
+            # (K, jloc, VC2) beta-sharded -> (K/n, jloc*n, VC2)
+            return jax.lax.all_to_all(rhs, axis, split_axis=0,
+                                      concat_axis=1, tiled=True)
+
+        def stage2(rhs):
+            # refl/scale applied post-reshard on the cluster shard
+            Kn, jn = rhs.shape[0], rhs.shape[1]
+            V = rhs.shape[2] // (C * 2)
+            rhs = rhs.reshape(Kn, jn, V, C, 2)
             rhs = jnp.where(refl[:, None, None, :, None], rhs[:, ::-1], rhs)
-            out = ld.fn(*dwt_ops, rhs.reshape(K // n, jloc * n, V * C * 2))
+            out = ld.fn(*dwt_ops, rhs.reshape(Kn, jn, V * C * 2))
             out = out.reshape(*out.shape[:2], V, C, 2)
             outc = out[..., 0] + 1j * out[..., 1]     # (Kloc, L, V, C)
             outc = outc * (_refl_sign(refl, parity)[:, :, None, :]
                            * scale[None, :, None, None])
             return jnp.moveaxis(outc, 2, 0)           # (V, Kloc, L, C)
+
+        return stage1, reshard, stage2
+
+    def _inverse_stages(self, refl, sign_sh, sign, gm, gmp, parity,
+                        idwt_ops):
+        axis, ld = self.axis, self._lid
+        B = self.plan.B
+        C = self.plan.gather_m.shape[1]
+
+        def stage1(packed_loc):
+            # packed_loc: (V, Kloc, L, C) lane stack of cluster shards;
+            # sign_sh cluster-sharded (scales the local lhs)
+            lhs = packed_loc * (_refl_sign(refl, parity)[None]
+                                * sign_sh[None, :, None, :])
+            lhs = jnp.stack([lhs.real, lhs.imag], -1)  # (V, Kloc, L, C, 2)
+            V, Kloc, L = lhs.shape[:3]
+            lhs = jnp.moveaxis(lhs, 0, 2)              # (Kloc, L, V, C, 2)
+            g = ld.fn(*idwt_ops, lhs.reshape(Kloc, L, V * C * 2))
+            J = g.shape[1]
+            g = g.reshape(Kloc, J, V, C, 2)
+            g = jnp.where(refl[:, None, None, :, None], g[:, ::-1], g)
+            return g.reshape(Kloc, J, V * C * 2)
+
+        def reshard(g):
+            # ONE all-to-all reshards all V lanes together:
+            # (Kloc, J, VC2) cluster-sharded -> (K, jloc, VC2)
+            return jax.lax.all_to_all(g, axis, split_axis=1,
+                                      concat_axis=0, tiled=True)
+
+        def stage2(g):
+            # sign replicated: masks the global bin scatter post-reshard
+            K, jloc = g.shape[0], g.shape[1]
+            V = g.shape[2] // (C * 2)
+            g = g.reshape(K, jloc, V, C, 2)
+            gc = g[..., 0] + 1j * g[..., 1]            # (K, jloc, V, C)
+            # scatter member columns into FFT bins (unused -> trash bin 2B)
+            gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
+            gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
+
+            def scatter(gl):                           # (K, jloc, C)
+                buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gl.dtype)
+                vals = jnp.swapaxes(gl, 1, 2).reshape(-1, jloc)
+                buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
+                return fft_synthesis(buf[: 2 * B, :, : 2 * B])
+
+            return jax.vmap(scatter, in_axes=2)(gc)    # (V, 2B, jloc, 2B)
+
+        return stage1, reshard, stage2
+
+    @property
+    def _cdtype(self):
+        return (jnp.complex64 if jnp.dtype(self.plan.d.dtype) == jnp.float32
+                else jnp.complex128)
+
+    def _forward_call(self):
+        fn = self._calls.get("fwd")
+        if fn is not None:
+            return fn
+        ld, ax0 = self._ld, P(self._shard)
+
+        def body(refl, sign, gm, gmp, w, scale, parity, f_loc, *dwt_ops):
+            stage1, reshard, stage2 = self._forward_stages(
+                refl, sign, gm, gmp, w, scale, parity, dwt_ops)
+            return stage2(reshard(stage1(f_loc)))
 
         sharded = ld.shard_map()(
             body, mesh=self.mesh,
@@ -329,41 +497,13 @@ class DistExecutor:
         fn = self._calls.get("inv")
         if fn is not None:
             return fn
-        axis, n, ld = self.axis, self.n_shards, self._lid
-        B = self.plan.B
-        ax0 = P(self._shard)
+        ld, ax0 = self._lid, P(self._shard)
 
         def body(refl, sign_sh, sign, gm, gmp, parity, packed_loc,
                  *idwt_ops):
-            # packed_loc: (V, Kloc, L, C) lane stack of cluster shards;
-            # sign_sh cluster-sharded (scales the local lhs), sign
-            # replicated (masks the global bin scatter after all-to-all)
-            lhs = packed_loc * (_refl_sign(refl, parity)[None]
-                                * sign_sh[None, :, None, :])
-            lhs = jnp.stack([lhs.real, lhs.imag], -1)  # (V, Kloc, L, C, 2)
-            V, Kloc, L, C, _ = lhs.shape
-            lhs = jnp.moveaxis(lhs, 0, 2)              # (Kloc, L, V, C, 2)
-            g = ld.fn(*idwt_ops, lhs.reshape(Kloc, L, V * C * 2))
-            J = g.shape[1]
-            g = g.reshape(Kloc, J, V, C, 2)
-            g = jnp.where(refl[:, None, None, :, None], g[:, ::-1], g)
-            # ONE all-to-all reshards all V lanes together
-            g = jax.lax.all_to_all(g.reshape(Kloc, J, V * C * 2), axis,
-                                   split_axis=1, concat_axis=0, tiled=True)
-            K, jloc = g.shape[0], g.shape[1]
-            g = g.reshape(K, jloc, V, C, 2)
-            gc = g[..., 0] + 1j * g[..., 1]            # (K, jloc, V, C)
-            # scatter member columns into FFT bins (unused -> trash bin 2B)
-            gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
-            gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
-
-            def scatter(gl):                           # (K, jloc, C)
-                buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gl.dtype)
-                vals = jnp.swapaxes(gl, 1, 2).reshape(-1, jloc)
-                buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
-                return fft_synthesis(buf[: 2 * B, :, : 2 * B])
-
-            return jax.vmap(scatter, in_axes=2)(gc)    # (V, 2B, jloc, 2B)
+            stage1, reshard, stage2 = self._inverse_stages(
+                refl, sign_sh, sign, gm, gmp, parity, idwt_ops)
+            return stage2(reshard(stage1(packed_loc)))
 
         sharded = ld.shard_map()(
             body, mesh=self.mesh,
@@ -373,6 +513,117 @@ class DistExecutor:
         )
         fn = jax.jit(sharded)
         self._calls["inv"] = fn
+        return fn
+
+    # -- the double-buffered pipelined callables ------------------------
+
+    def _forward_pipe_call(self):
+        """Whole-batch forward: (n_chunks, V, 2B, 2B, 2B) in ONE
+        shard_map call.  The fori_loop body reads chunk i from its
+        buffer slot and launches the local DWT kernel on it while chunk
+        i+1's all-to-all is staged into the OTHER slot -- the two halves
+        share no data, so the scheduler can overlap them (see
+        :func:`pipeline_steps` / :func:`pipeline_slots`)."""
+        fn = self._calls.get("fwd_pipe")
+        if fn is not None:
+            return fn
+        ld, ax0 = self._ld, P(self._shard)
+        L = self.plan.d.shape[1]
+        C = self.plan.gather_m.shape[1]
+        cdtype = self._cdtype
+
+        def body(refl, sign, gm, gmp, w, scale, parity, f_all, *dwt_ops):
+            stage1, reshard, stage2 = self._forward_stages(
+                refl, sign, gm, gmp, w, scale, parity, dwt_ops)
+            nc, V = f_all.shape[0], f_all.shape[1]
+            # prologue: chunk 0 through stage 1 + its collective.  Stage
+            # 1 runs per chunk INSIDE the loop (not vmapped up front) so
+            # only two resharded chunks are ever live -- the pipeline's
+            # footprint stays at the two-slot buffer, not the batch.
+            first = reshard(stage1(f_all[0]))
+            buf = jnp.zeros((2,) + first.shape, first.dtype).at[0].set(first)
+            out = jnp.zeros((nc, V, first.shape[0], L, C), cdtype)
+
+            def step(i, carry):
+                buf, out = carry
+                # read chunk i from the CARRIED buffer (not the updated
+                # one): the kernel launch below must not depend on the
+                # collective being staged this step
+                cur = jax.lax.dynamic_index_in_dim(buf, i % 2, 0,
+                                                   keepdims=False)
+                nxt = reshard(stage1(jax.lax.dynamic_index_in_dim(
+                    f_all, i + 1, 0, keepdims=False)))
+                buf = jax.lax.dynamic_update_index_in_dim(
+                    buf, nxt, (i + 1) % 2, 0)
+                out = jax.lax.dynamic_update_index_in_dim(
+                    out, stage2(cur), i, 0)
+                return buf, out
+
+            buf, out = jax.lax.fori_loop(0, nc - 1, step, (buf, out))
+            last = stage2(jax.lax.dynamic_index_in_dim(
+                buf, (nc - 1) % 2, 0, keepdims=False))
+            return jax.lax.dynamic_update_index_in_dim(out, last, nc - 1, 0)
+
+        sharded = ld.shard_map()(
+            body, mesh=self.mesh,
+            in_specs=(ax0, P(), P(), P(), ax0, P(), P(),
+                      P(None, None, None, self._shard, None))
+            + ld.specs(ax0),
+            out_specs=P(None, None, self._shard),
+        )
+        fn = jax.jit(sharded)
+        self._calls["fwd_pipe"] = fn
+        return fn
+
+    def _inverse_pipe_call(self):
+        """Whole-batch inverse: (n_chunks, V, Kloc*n, L, C) in ONE
+        shard_map call.  Mirror pipeline of :meth:`_forward_pipe_call`:
+        here stage 1 IS the local iDWT kernel, so the loop launches
+        chunk i+1's kernel while chunk i's all-to-all is in flight."""
+        fn = self._calls.get("inv_pipe")
+        if fn is not None:
+            return fn
+        n, ld, ax0 = self.n_shards, self._lid, P(self._shard)
+        B = self.plan.B
+        cdtype = self._cdtype
+
+        def body(refl, sign_sh, sign, gm, gmp, parity, packed_all,
+                 *idwt_ops):
+            stage1, reshard, stage2 = self._inverse_stages(
+                refl, sign_sh, sign, gm, gmp, parity, idwt_ops)
+            nc, V = packed_all.shape[0], packed_all.shape[1]
+            jloc = 2 * B // n
+            first = stage1(packed_all[0])         # prologue: chunk 0 kernel
+            buf = jnp.zeros((2,) + first.shape, first.dtype).at[0].set(first)
+            out = jnp.zeros((nc, V, 2 * B, jloc, 2 * B), cdtype)
+
+            def step(i, carry):
+                buf, out = carry
+                cur = jax.lax.dynamic_index_in_dim(buf, i % 2, 0,
+                                                   keepdims=False)
+                resharded = reshard(cur)          # chunk i's collective ...
+                nxt = stage1(jax.lax.dynamic_index_in_dim(
+                    packed_all, i + 1, 0, keepdims=False))
+                # ... overlaps chunk i+1's local kernel (independent slot)
+                buf = jax.lax.dynamic_update_index_in_dim(
+                    buf, nxt, (i + 1) % 2, 0)
+                out = jax.lax.dynamic_update_index_in_dim(
+                    out, stage2(resharded), i, 0)
+                return buf, out
+
+            buf, out = jax.lax.fori_loop(0, nc - 1, step, (buf, out))
+            last = stage2(reshard(jax.lax.dynamic_index_in_dim(
+                buf, (nc - 1) % 2, 0, keepdims=False)))
+            return jax.lax.dynamic_update_index_in_dim(out, last, nc - 1, 0)
+
+        sharded = ld.shard_map()(
+            body, mesh=self.mesh,
+            in_specs=(ax0, ax0, P(), P(), P(), P(),
+                      P(None, None, self._shard)) + ld.specs(ax0),
+            out_specs=P(None, None, None, self._shard, None),
+        )
+        fn = jax.jit(sharded)
+        self._calls["inv_pipe"] = fn
         return fn
 
     # -- executors -------------------------------------------------------
@@ -400,26 +651,31 @@ class DistExecutor:
         """iFSOFT: packed coefficients (K, L, C) -> samples (2B, 2B, 2B)."""
         return self.inverse_lanes(jnp.asarray(packed)[None])[0]
 
-    def forward_batch(self, fs, *, stats=None):
+    def forward_batch(self, fs, *, stats=None, overlap=None):
         """Any request count, chunked onto lane_width-wide sharded
-        launches (final partial chunk zero-padded: one compiled shape)."""
-        return self._batch(fs, self.forward_lanes, stats)
+        launches (final partial chunk zero-padded: one compiled shape).
+        ``overlap`` overrides the executor's default mode for this call
+        ("off": serial per-chunk launches; "pipelined": one
+        double-buffered shard_map call for the whole batch)."""
+        return self._batch(fs, self.forward_lanes, stats, overlap)
 
-    def inverse_batch(self, packed, *, stats=None):
-        return self._batch(packed, self.inverse_lanes, stats)
+    def inverse_batch(self, packed, *, stats=None, overlap=None):
+        return self._batch(packed, self.inverse_lanes, stats, overlap)
 
-    def _batch(self, xs, lanes_fn, stats):
+    def _batch(self, xs, lanes_fn, stats, overlap=None):
         from repro.kernels import ops as kops   # deferred: kernels import core
+        mode = check_overlap_mode(self.overlap if overlap is None
+                                  else overlap)
         xs = jnp.asarray(xs)
+        fwd = getattr(lanes_fn, "__func__", None) is \
+            DistExecutor.forward_lanes
         if xs.shape[0] == 0:
             p = self.plan
-            cdtype = (jnp.complex64 if jnp.dtype(p.d.dtype) == jnp.float32
-                      else jnp.complex128)
-            fwd = getattr(lanes_fn, "__func__", None) is \
-                DistExecutor.forward_lanes
             shape = ((p.n_padded, p.B, p.gather_m.shape[1]) if fwd
                      else (2 * p.B,) * 3)
-            return jnp.zeros((0,) + shape, cdtype)
+            return jnp.zeros((0,) + shape, self._cdtype)
+        if mode == "pipelined":
+            return self._batch_pipelined(xs, fwd, stats)
         V = self.lane_width
         outs = []
         for n0 in range(0, xs.shape[0], V):
@@ -431,6 +687,34 @@ class DistExecutor:
                 stats["padded_lanes"] += V - n
             outs.append(out[:n])       # stay on device: no per-chunk sync
         return jnp.concatenate(outs, axis=0)
+
+    def _batch_pipelined(self, xs, fwd, stats):
+        """The whole batch as ONE double-buffered shard_map call: pad to
+        n_chunks * V, reshape to (n_chunks, V, ...), pipeline.  Launch
+        accounting is identical to the serial path (each chunk still
+        runs one local-kernel launch and one all-to-all); only their
+        SCHEDULE changes, so stats stay comparable across modes."""
+        n, V = xs.shape[0], self.lane_width
+        n_chunks = -(-n // V)
+        pad = n_chunks * V - n
+        if pad:
+            xs = jnp.concatenate(
+                [xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)])
+        xs = xs.reshape((n_chunks, V) + xs.shape[1:])
+        p = self.plan
+        if fwd:
+            out = self._forward_pipe_call()(
+                p.reflected, p.sign, p.gather_m, p.gather_mp, p.w, p.scale,
+                p.parity, xs, *self._ld.operands)
+        else:
+            out = self._inverse_pipe_call()(
+                p.reflected, p.sign, p.sign, p.gather_m, p.gather_mp,
+                p.parity, xs, *self._lid.operands)
+        if stats is not None:
+            stats["launches"] += n_chunks
+            stats["transforms"] += n
+            stats["padded_lanes"] += pad
+        return out.reshape((n_chunks * V,) + out.shape[2:])[:n]
 
 
 @functools.lru_cache(maxsize=8)

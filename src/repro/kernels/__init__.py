@@ -55,11 +55,17 @@ V = 1, leaving lane-batching headroom to V ~ 16 under the ~16 MB ceiling.
 $REPRO_VMEM_BYTES (autotune.vmem_limit_bytes).
 
 Tile choice is measured, not guessed: kernels/autotune.py sweeps the
-divisor-constrained candidates per (B, dtype, backend, impl, V) and
-memoizes winners in $REPRO_AUTOTUNE_CACHE (default
-~/.cache/repro/autotune.json); benchmarks/dwt_schedules.py prints the
-block/HBM accounting behind the guidance above, and benchmarks/planner.py
-smokes the plan build/cache/executor path.
+divisor-constrained candidates per (B, dtype, backend, impl, V,
+vmem-limit, n_shards) and memoizes winners in $REPRO_AUTOTUNE_CACHE
+(default ~/.cache/repro/autotune.json).  Mesh plans tune the PER-DEVICE
+cluster shard (kloc = K/n_shards) under an /S{n_shards} cache-key
+segment, and the distributed batch execution mode -- serial V-chunk
+launches vs the DistExecutor's double-buffered overlap pipeline -- is
+resolved by autotune.static_overlap / autotune_overlap under an
+/O{mode} segment (docs/ARCHITECTURE.md spells out the full key
+grammar).  benchmarks/dwt_schedules.py prints the block/HBM accounting
+behind the guidance above, and benchmarks/planner.py smokes the plan
+build/cache/executor path.
 """
 from . import (autotune, dwt, dwt_fused, folded_attention, ops, ref,  # noqa: F401
                runtime, wigner_rec)

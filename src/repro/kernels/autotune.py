@@ -4,11 +4,15 @@ OpenFFT's lesson (arXiv:1501.07350): an exhaustive-but-cheap measured sweep
 over decompositions is what turns a parallel transform design into actual
 speedup.  This module times real kernel launches for a small candidate set
 of (tk, tl, tj, V) tilings and memoizes the winner on disk keyed by
-(B, dtype, backend, impl, V, vmem_limit, n_shards) -- one sweep per
-machine/shape/mesh-decomposition, then every subsequent make_dwt_fn call
-reads the cache.  n_shards > 1 tunes the per-device cluster shard of a
-mesh plan (see repro.plan: mesh plans resolve their schedule through
-this key).
+(B, dtype, backend, impl, V, vmem_limit, n_shards, overlap) -- one sweep
+per machine/shape/mesh-decomposition, then every subsequent make_dwt_fn
+call reads the cache.  n_shards > 1 tunes the per-device cluster shard
+of a mesh plan (see repro.plan: mesh plans resolve their schedule
+through this key); the /O{mode} key segment separates schedules timed
+under the double-buffered overlap pipeline from serial ones, and
+:func:`autotune_overlap` / :func:`static_overlap` resolve which mode a
+mesh plan's batch executors run (measured on the real mesh, or the
+static n_shards > 1 heuristic).
 
     from repro.kernels import autotune
     cfg = autotune.autotune_dwt(plan, impl="fused")      # {'tk': ..., ...}
@@ -33,7 +37,8 @@ import jax.numpy as jnp
 
 from . import ops
 
-__all__ = ["autotune_dwt", "tuned_dwt_fn", "tuned_idwt_fn", "cache_path",
+__all__ = ["autotune_dwt", "autotune_overlap", "static_overlap",
+           "tuned_dwt_fn", "tuned_idwt_fn", "cache_path",
            "candidate_tiles", "estimate_vmem_bytes", "vmem_limit_bytes"]
 
 _DEF_CACHE = "~/.cache/repro/autotune.json"
@@ -128,15 +133,19 @@ def _time_fn(fn, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _key(plan, impl: str, V, limit: int, n_shards: int = 1) -> str:
+def _key(plan, impl: str, V, limit: int, n_shards: int = 1,
+         overlap: str = "off") -> str:
     # the VMEM ceiling is part of the key: a winner measured under a
     # tight $REPRO_VMEM_BYTES (guard skipped the wide-V candidates) must
     # not be served when the budget is back to normal, and vice versa.
     # The mesh decomposition (n_shards) is part of the key too: the
     # device-local problem is the kloc = K/n cluster shard, and OpenFFT's
     # lesson is that the winning tile is decomposition-shape-specific.
+    # The /O{mode} segment keys the distributed execution mode, so a
+    # schedule timed under the double-buffered overlap pipeline never
+    # collides with one timed under serial per-chunk launches.
     return (f"{impl}/B{plan.B}/K{plan.n_padded}/{jnp.dtype(plan.d.dtype).name}"
-            f"/{jax.default_backend()}/V{V}/M{limit}/S{n_shards}")
+            f"/{jax.default_backend()}/V{V}/M{limit}/S{n_shards}/O{overlap}")
 
 
 def _local_shard_timer(plan, tk: int, n_shards: int, interpret):
@@ -239,6 +248,80 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
                f"ceiling; raise $REPRO_VMEM_BYTES?)" if n_skipped else ""))
     _store_cache(path, {key: best})
     return best
+
+
+def static_overlap(n_shards: int) -> str:
+    """Static heuristic for the distributed batch execution mode
+    (``Schedule.overlap``): mesh plans (n_shards > 1) default to the
+    double-buffered "pipelined" mode -- every V-chunk's all-to-all can
+    hide behind a neighboring chunk's local kernel, and when it cannot
+    (tiny batches, fast interconnect) the pipeline costs nothing but
+    loop bookkeeping.  Single-shard plans have no collective to hide,
+    so they stay "off"."""
+    return "pipelined" if n_shards > 1 else "off"
+
+
+def autotune_overlap(plan, mesh, axis, *, V: int = 1, tk: int | None = None,
+                     n_chunks: int = 4, reps: int = 3, refresh: bool = False,
+                     cache: str | os.PathLike | None = None, interpret=None,
+                     vmem_limit: int | None = None) -> dict:
+    """Measure-and-cache the distributed batch execution mode: time an
+    n_chunks-deep lane-packed ``inverse_batch`` under overlap="off" and
+    overlap="pipelined" on the REAL mesh and return the winner as
+    {"overlap", "per_transform_s"}.
+
+    Each mode's timing is cached on disk under its own ``/O{mode}`` key
+    segment (see :func:`_key`) plus a ``/T{tk}`` suffix naming the
+    cluster tile of the fused local kernel being timed, so overlapped
+    and serial schedules never collide -- and neither do timings of
+    different tile schedules (a re-swept tk re-times the modes instead
+    of serving measurements of a different kernel).  The executor is
+    ephemeral (fused device-local kernels built from the plan's shard
+    metadata); the planner (``repro.plan(..., tune="measure")``) feeds
+    the winner into ``Schedule.overlap``.  Interpret-mode CPU timing
+    cannot show real collective overlap (the paired benchmark asserts
+    the schedule structurally instead); on TPU hardware the measured
+    winner reflects the actual interconnect/compute balance.
+    """
+    from repro.core import parallel  # deferred: core.parallel imports kernels
+
+    axis = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis]))
+    path = pathlib.Path(cache) if cache is not None else cache_path()
+    store = _load_cache(path)
+    limit = vmem_limit_bytes() if vmem_limit is None else vmem_limit
+    K, L, _ = plan.d.shape
+    C = plan.gather_m.shape[1]
+    cdtype = (jnp.complex64 if jnp.dtype(plan.d.dtype) == jnp.float32
+              else jnp.complex128)
+    # meta resolves the default tk, which is part of the cache key: the
+    # timed kernel is tile-specific, so its measurements must be too
+    meta = parallel.fused_shard_meta(plan, n_shards, tk)
+    rng = np.random.default_rng(0)
+    packed = jnp.asarray(rng.normal(size=(n_chunks * V, K, L, C))
+                         + 1j * rng.normal(size=(n_chunks * V, K, L, C)),
+                         cdtype)
+    results = {}
+    ex = None   # ONE executor serves both modes (per-call override)
+    for mode in ("off", "pipelined"):
+        key = _key(plan, "overlap", V, limit, n_shards,
+                   overlap=mode) + f"/T{meta.tk}"
+        if not refresh and key in store:
+            results[mode] = store[key]
+            continue
+        if ex is None:
+            ex = parallel.DistExecutor(
+                plan, mesh, axis, lane_width=V,
+                local_dwt=parallel.make_fused_local_dwt(
+                    plan, n_shards, interpret=interpret, meta=meta),
+                local_idwt=parallel.make_fused_local_idwt(
+                    plan, n_shards, interpret=interpret, meta=meta))
+        t = _time_fn(lambda x: ex.inverse_batch(x, overlap=mode), packed,
+                     reps=reps) / (n_chunks * V)
+        entry = {"overlap": mode, "per_transform_s": t}
+        _store_cache(path, {key: entry})
+        results[mode] = entry
+    return min(results.values(), key=lambda r: r["per_transform_s"])
 
 
 def tuned_dwt_fn(plan, impl: str = "fused", *, Vs=(1,), interpret=None,

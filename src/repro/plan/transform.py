@@ -26,9 +26,13 @@ table + cluster metadata), the single and V-lane-batched kernel
 closures, and (for mesh plans) the shard metadata plus the
 mesh-resident :class:`repro.core.parallel.DistExecutor` (shard specs,
 jitted shard_map callables, lane-packed batch bodies -- one all-to-all
-per V-wide chunk).  Mesh plans carry their own schedule key: tiles and
-lane width resolve against the per-device cluster shard, statically or
-through the autotuner's per-mesh measured sweep.  Downstream layers
+per V-wide chunk).  Mesh plans carry their own schedule key: tiles,
+lane width, and the communication/compute ``overlap`` mode resolve
+against the per-device cluster shard, statically or through the
+autotuner's per-mesh measured sweep (``Schedule.overlap`` picks whether
+the batch executors run their V-chunks serially or through the
+executor's double-buffered pipeline -- chunk i's local kernel
+overlapping chunk i+1's all-to-all).  Downstream layers
 (``core.batched``, ``core.parallel``, ``repro.so3``) are engines behind
 the plan; they remain importable for kernel-level work and as
 deprecation shims.
@@ -36,7 +40,14 @@ deprecation shims.
 Plans are memoized: ``plan(...)`` with an identical configuration
 returns the SAME ``Transform`` object (see :func:`cache_stats`), so a
 serving loop, a benchmark sweep, and a correlation engine at one
-bandwidth all share one set of compiled resources.
+bandwidth all share one set of compiled resources.  Memoization rules:
+the cache key is the full configuration tuple (B, dtype, impl, V,
+tiles, mesh identity + shard axes, tune mode, overlap, VMEM limit,
+interpret, bucket count, tune-cache path); meshes hash by object
+value/identity, so two distinct-but-equal mesh objects may plan twice
+while one mesh object always shares.  The cache holds the 16 most
+recent configurations (LRU) and :func:`cache_stats` counts mesh plans
+separately.  See docs/ARCHITECTURE.md for the full layer map.
 """
 from __future__ import annotations
 
@@ -76,6 +87,14 @@ class Schedule:
     against the per-device cluster shard (kloc = K/n_shards) -- tiles
     must divide the LOCAL cluster count and the VMEM guard sees the
     local footprint -- so every mesh shape gets its own (tk, tl, tj, V).
+
+    ``overlap`` is the distributed batch execution mode ("off" |
+    "pipelined", :data:`repro.core.parallel.OVERLAP_MODES`): how the
+    mesh batch executors schedule their ceil(n/V) V-chunks.  Resolved
+    through :mod:`repro.kernels.autotune` -- the static n_shards > 1
+    heuristic by default, or measured on the real mesh under
+    ``tune="measure"`` (cached under the ``/O{mode}`` key segment) --
+    and always "off" for plans without a mesh.
     """
 
     impl: str               # executor schedule (one of IMPLS)
@@ -87,6 +106,7 @@ class Schedule:
     vmem_bytes: int         # static per-grid-step footprint estimate
     vmem_limit: int         # budget the schedule was resolved under
     n_shards: int = 1       # mesh decomposition the schedule was tuned for
+    overlap: str = "off"    # distributed batch mode ("off" | "pipelined")
     per_transform_s: float | None = None   # measured (tune="measure") only
 
     @property
@@ -113,20 +133,32 @@ def _shard_tk(tk: int, K_local: int) -> int:
     return max(t for t in range(1, min(tk, K_local) + 1) if K_local % t == 0)
 
 
+def _resolve_overlap(overlap, n_shards: int) -> str:
+    """Explicit overlap= passthrough, else the static autotune heuristic
+    (mesh plans pipeline, single-shard plans don't)."""
+    if overlap is None:
+        return autotune.static_overlap(n_shards)
+    return parallel.check_overlap_mode(overlap)
+
+
 def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
-                     limit: int, n_shards: int = 1) -> Schedule:
+                     limit: int, n_shards: int = 1,
+                     overlap=None) -> Schedule:
     """Largest lane width under the VMEM guard, default tiles.
 
     Mesh plans (n_shards > 1) resolve against the per-device cluster
     shard: the tile must divide kloc = K/n_shards (that is the kernel
     the shard_map body launches), and the VMEM estimate therefore
-    reflects the per-device grid step, not the unsharded one.
+    reflects the per-device grid step, not the unsharded one.  The
+    distributed batch mode resolves through the static overlap heuristic
+    unless the caller fixed it (``overlap="off" | "pipelined"``).
     """
     K, L, J = soft_plan.d.shape
     K_local = K // n_shards
     C = soft_plan.gather_m.shape[1]
     itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
     impl = "fused" if impl == "auto" else impl
+    omode = _resolve_overlap(overlap, n_shards)
     if n_shards > 1:    # tiles must divide the per-device cluster count
         tk = _shard_tk(_DEF_TK if tk is None else tk, K_local)
     elif tk is None:
@@ -136,7 +168,8 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     if impl == "reference":     # pure jnp: no kernel, no VMEM constraint
         source = "static" if V == "auto" else "explicit"
         V = 4 if V == "auto" else V
-        return Schedule(impl, V, tk, tl, tj, source, 0, limit, n_shards)
+        return Schedule(impl, V, tk, tl, tj, source, 0, limit, n_shards,
+                        overlap=omode)
 
     def est(v):
         return autotune.estimate_vmem_bytes(impl, L=L, J=J, C2=v * C * 2,
@@ -159,17 +192,22 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
                 f"explicit schedule impl={impl} V={V} tk={tk} needs "
                 f"{est(V)} bytes of VMEM per grid step, over the {limit} "
                 f"budget (raise $REPRO_VMEM_BYTES or vmem_budget)")
-    return Schedule(impl, V, tk, tl, tj, source, est(V), limit, n_shards)
+    return Schedule(impl, V, tk, tl, tj, source, est(V), limit, n_shards,
+                    overlap=omode)
 
 
 def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
-                       reps: int, cache, n_shards: int = 1) -> Schedule:
+                       reps: int, cache, n_shards: int = 1, overlap=None,
+                       mesh=None, axis=None) -> Schedule:
     """Resolve via the measured autotune sweep (disk-cached winners).
 
     Mesh plans sweep the per-device cluster shard (autotune_dwt's
     n_shards key): the device-local kernel on a mesh is always the fused
     family, so "auto" collapses to one fused sweep instead of timing the
-    same local kernel twice.
+    same local kernel twice.  When the overlap mode is not fixed by the
+    caller, mesh plans also time the distributed batch under both modes
+    (:func:`repro.kernels.autotune.autotune_overlap`, each cached under
+    its own /O{mode} key) and take the faster.
     """
     if n_shards > 1:
         impls = ("fused",) if impl == "auto" else (impl,)
@@ -183,6 +221,14 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
                                     cache=cache, n_shards=n_shards)
         if best is None or cfg["per_transform_s"] < best["per_transform_s"]:
             best, best_impl = cfg, im
+    if overlap is None and n_shards > 1 and mesh is not None:
+        omode = autotune.autotune_overlap(
+            soft_plan, mesh, axis, V=best["V"],
+            tk=_shard_tk(best["tk"], soft_plan.n_padded // n_shards),
+            reps=reps, cache=cache, interpret=interpret,
+            vmem_limit=limit)["overlap"]
+    else:
+        omode = _resolve_overlap(overlap, n_shards)
     K, L, J = soft_plan.d.shape
     C = soft_plan.gather_m.shape[1]
     est = autotune.estimate_vmem_bytes(
@@ -190,7 +236,7 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
         tl=best["tl"], tj=best["tj"],
         itemsize=jnp.dtype(soft_plan.d.dtype).itemsize)
     return Schedule(best_impl, best["V"], best["tk"], best["tl"], best["tj"],
-                    "measured", est, limit, n_shards,
+                    "measured", est, limit, n_shards, overlap=omode,
                     per_transform_s=best["per_transform_s"])
 
 
@@ -219,7 +265,7 @@ class Transform:
 
     def __init__(self, *, soft_plan: SoftPlan, schedule: Schedule,
                  mesh=None, axis=None, n_shards: int = 1, n_buckets: int = 8,
-                 interpret=None):
+                 interpret=None, tune: str = "static"):
         self.soft_plan = soft_plan
         self.schedule = schedule
         self.B = soft_plan.B
@@ -229,6 +275,7 @@ class Transform:
         self.n_shards = n_shards
         self.n_buckets = n_buckets
         self.interpret = interpret
+        self.tune = tune
         self.reset_stats()
         self._resources: dict = {}
 
@@ -251,15 +298,24 @@ class Transform:
         self.stats = dict(launches=0, transforms=0, padded_lanes=0)
 
     def describe(self) -> dict:
-        """One flat dict for logs / benchmark rows.  Mesh plans also
-        report the shard axis names, the per-device shard counts
+        """One flat dict for logs / benchmark rows.
+
+        Tuning provenance is reported in full: ``tune`` is the REQUESTED
+        mode ("static" | "measure") and ``source`` the RESOLVED one
+        ("explicit" | "static" | "measured" -- a tune="measure" request
+        can fall back to "static" when the impl has no measured sweep or
+        explicit tiles pinned the schedule).  ``overlap`` is the
+        distributed batch execution mode the schedule resolved to
+        ("off" | "pipelined"; always "off" without a mesh).  Mesh plans
+        also report the shard axis names, the per-device shard counts
         (clusters and beta rows), and the resolved per-device lane
         width."""
         s = self.schedule
         out = {
             "B": self.B, "dtype": jnp.dtype(self.dtype).name,
             "impl": s.impl, "V": s.V, "tk": s.tk, "tl": s.tl, "tj": s.tj,
-            "source": s.source, "vmem_bytes": s.vmem_bytes,
+            "tune": self.tune, "source": s.source, "overlap": s.overlap,
+            "vmem_bytes": s.vmem_bytes,
             "vmem_limit": s.vmem_limit, "n_shards": self.n_shards,
             "n_clusters": self.soft_plan.n_clusters,
             "n_padded": self.soft_plan.n_padded,
@@ -353,12 +409,14 @@ class Transform:
         """The mesh-resident :class:`repro.core.parallel.DistExecutor` of
         this plan: shard specs, sign/reflection tables, local kernel
         closures, and jitted shard_map callables, built ONCE per (plan,
-        mesh) and reused by every sharded executor call."""
+        mesh) and reused by every sharded executor call.  The executor
+        inherits the schedule's resolved ``overlap`` mode as its batch
+        default (per-call ``overlap=`` still overrides)."""
         if self.mesh is None:
             raise ValueError("executor() on a plan built without a mesh")
         return self._res("executor", lambda: parallel.DistExecutor(
             self.soft_plan, self.mesh, self.axis,
-            lane_width=self.schedule.V,
+            lane_width=self.schedule.V, overlap=self.schedule.overlap,
             local_dwt=self._local_dwt(), local_idwt=self._local_idwt()))
 
     # -- executors: single transform ------------------------------------
@@ -395,27 +453,39 @@ class Transform:
 
     # -- executors: V-lane batches --------------------------------------
 
-    def forward_batch(self, fs, *, stats=None):
+    def forward_batch(self, fs, *, stats=None, overlap=None):
         """FSOFT of any request count: (n, 2B, 2B, 2B) -> (n, B, 2B-1,
         2B-1).  Chunks of V ride one lane-packed kernel launch; the final
         partial chunk is zero-padded so every launch reuses the single
         compiled kernel shape.  On mesh plans each chunk is ONE
         lane-packed sharded launch (one all-to-all for all V lanes) via
-        the plan's :meth:`executor`."""
+        the plan's :meth:`executor`; when the schedule resolved
+        ``overlap="pipelined"`` the chunks run through the executor's
+        double-buffered pipeline (chunk i's local kernel overlapping
+        chunk i+1's collective) instead of serially; pass ``overlap=``
+        to override the resolved mode for one call (mesh plans only)."""
         return self._batch(fs, batched.forward_clustered_batch,
                            lambda: self.dwt_fn_batch, "dwt_fn",
                            out_shape=(self.B, 2 * self.B - 1, 2 * self.B - 1),
-                           stats=stats)
+                           stats=stats, overlap=overlap)
 
-    def inverse_batch(self, fhats, *, stats=None):
+    def inverse_batch(self, fhats, *, stats=None, overlap=None):
         """iFSOFT of any request count: (n, B, 2B-1, 2B-1) -> (n, 2B,
         2B, 2B); see :meth:`forward_batch`."""
         return self._batch(fhats, batched.inverse_clustered_batch,
                            lambda: self.idwt_fn_batch, "idwt_fn",
-                           out_shape=(2 * self.B,) * 3, stats=stats)
+                           out_shape=(2 * self.B,) * 3, stats=stats,
+                           overlap=overlap)
 
-    def _batch(self, xs, engine, get_fn, fn_kw, out_shape, stats):
+    def _batch(self, xs, engine, get_fn, fn_kw, out_shape, stats,
+               overlap=None):
         stats = self.stats if stats is None else stats
+        if overlap is not None:
+            parallel.check_overlap_mode(overlap)   # typos before routing
+            if overlap != "off" and self.mesh is None:
+                raise ValueError(
+                    f"overlap={overlap!r} needs a mesh plan; local "
+                    "batches have no collective to pipeline")
         xs = jnp.asarray(xs)
         n_total = xs.shape[0]
         if n_total == 0:
@@ -423,10 +493,10 @@ class Transform:
         if self.mesh is not None:     # lane-packed sharded launches
             ex = self.executor()
             if fn_kw == "dwt_fn":
-                packed = ex.forward_batch(xs, stats=stats)
+                packed = ex.forward_batch(xs, stats=stats, overlap=overlap)
                 return parallel.packed_to_dense_batch(self.soft_plan, packed)
             packed = parallel.dense_to_packed_batch(self.soft_plan, xs)
-            return ex.inverse_batch(packed, stats=stats)
+            return ex.inverse_batch(packed, stats=stats, overlap=overlap)
         V = self.schedule.V
         fn = get_fn()
         outs = []
@@ -498,7 +568,8 @@ def _mesh_key(mesh):
 def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
          tk: int | None = None, tl: int | None = None, tj: int | None = None,
          mesh=None, axis=("data", "model"), tune: str | None = None,
-         vmem_budget: int | None = None, interpret=None, n_buckets: int = 8,
+         overlap: str | None = None, vmem_budget: int | None = None,
+         interpret=None, n_buckets: int = 8,
          tune_reps: int = 3, tune_cache=None) -> Transform:
     """Plan one SO(3) FFT configuration; returns a memoized Transform.
 
@@ -511,6 +582,9 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
     mesh/axis: plan the sharded executors -- the cluster axis is padded
           and shard-balance-ordered, and forward/inverse route through
           core.parallel with the plan's shard metadata.
+    overlap: None (resolve: mesh plans pipeline statically, or the
+          measured mode comparison under tune="measure") or an explicit
+          "off" | "pipelined" distributed batch execution mode.
     vmem_budget: per-grid-step ceiling in bytes (default
           kernels.autotune.vmem_limit_bytes(), i.e. $REPRO_VMEM_BYTES).
 
@@ -523,13 +597,20 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
                          f"got {impl!r}")
     if V != "auto" and (not isinstance(V, int) or V < 1):
         raise ValueError(f"V must be 'auto' or a positive int, got {V!r}")
+    if overlap is not None:
+        parallel.check_overlap_mode(overlap)       # typos before mesh advice
+        if overlap != "off" and mesh is None:
+            raise ValueError(
+                f"overlap={overlap!r} needs a mesh plan; local batches "
+                "have no collective to pipeline")
     mode = _tune_mode(tune)
     limit = autotune.vmem_limit_bytes() if vmem_budget is None \
         else int(vmem_budget)
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
     key = (B, jnp.dtype(dtype).str, impl, V, tk, tl, tj, _mesh_key(mesh),
-           axis if mesh is not None else None, mode, limit, interpret,
-           n_buckets, None if tune_cache is None else str(tune_cache))
+           axis if mesh is not None else None, mode, overlap, limit,
+           interpret, n_buckets,
+           None if tune_cache is None else str(tune_cache))
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
@@ -574,14 +655,16 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
     if mode == "measure" and impl != "reference" and measurable \
             and tk is None and tl is None and tj is None:
         schedule = _measured_schedule(soft_plan, impl, V, limit, interpret,
-                                      tune_reps, tune_cache, n_shards)
+                                      tune_reps, tune_cache, n_shards,
+                                      overlap, mesh, axis)
     else:
         schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit,
-                                    n_shards)
+                                    n_shards, overlap)
 
     t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
                   axis=axis if mesh is not None else None,
-                  n_shards=n_shards, n_buckets=n_buckets, interpret=interpret)
+                  n_shards=n_shards, n_buckets=n_buckets, interpret=interpret,
+                  tune=mode)
     _CACHE[key] = t
     while len(_CACHE) > _CACHE_MAX:
         _CACHE.popitem(last=False)

@@ -158,7 +158,11 @@ class CorrelationEngine:
     inverse -- the outer-product coefficient stacks of the template bank
     are cluster-sharded over the mesh and V templates ride each sharded
     launch (one all-to-all per chunk), so a bank match runs the paper's
-    exclusive-memory-range decomposition end to end.
+    exclusive-memory-range decomposition end to end.  Bank matching
+    inherits the plan's resolved ``overlap`` mode with it: on mesh plans
+    (``Schedule.overlap == "pipelined"`` by default) a multi-chunk bank
+    runs through the executor's double-buffered pipeline, template chunk
+    i's iDWT kernel overlapping chunk i-1's all-to-all.
     """
 
     def __init__(self, B: int | None = None, *, transform=None,

@@ -73,7 +73,10 @@ class SO3Service:
 
         mesh/axis plan the engines on a device mesh: every packed launch
         then runs the lane-packed SHARDED inverse (template stacks
-        cluster-sharded, one all-to-all per launch group)."""
+        cluster-sharded, one all-to-all per launch group), and
+        multi-chunk drains inherit the plan's overlap pipeline
+        (Schedule.overlap, "pipelined" on mesh plans by default) --
+        each chunk's collective hidden behind a neighbor's kernel."""
         self.bandwidths = tuple(bandwidths)
         self.lane_width = lane_width
         self.max_wait_ms = max_wait_ms

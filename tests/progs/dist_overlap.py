@@ -1,0 +1,31 @@
+"""Subprocess program: the overlap-mode acceptance checks alone --
+bitwise parity of overlap="pipelined" vs overlap="off" forward/inverse
+batches (batch sizes 8 and 16) on 2 fake CPU devices, planner overlap
+resolution, and launch accounting.  A fast CI entry point for the
+double-buffered pipeline; the full distributed program is
+tests/progs/dist_plan.py (which also runs this check).  Asserts
+internally."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+
+def main():
+    import jax
+
+    from repro.core.compat import make_mesh
+
+    import dist_plan
+
+    assert jax.device_count() == 2, jax.device_count()
+    dist_plan.check_overlap_modes(make_mesh((2,), ("data",)))
+    print("DIST_OVERLAP_OK")
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    main()

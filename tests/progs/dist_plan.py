@@ -11,6 +11,7 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro import plan
 from repro.core import parallel, soft
@@ -129,6 +130,56 @@ def check_sharded_correlation(mesh):
         np.testing.assert_allclose(rm.score, rl.score, rtol=1e-9)
 
 
+def check_overlap_modes(mesh, batch_sizes=(8, 16)):
+    """Acceptance (PR-5): overlap="pipelined" is bitwise equal to
+    overlap="off" for forward and inverse batches on the 2-device mesh
+    -- the double-buffered pipeline reorders the chunk schedule, not the
+    arithmetic -- with identical launch/padding accounting, and the
+    planner resolves mesh plans to the pipelined mode by default."""
+    t = plan(B, impl="fused", mesh=mesh, axis=("data",))
+    d = t.describe()
+    assert d["overlap"] == "pipelined", d       # static mesh heuristic
+    assert d["tune"] == "static" and d["source"] in ("static", "explicit")
+    assert t.executor().overlap == "pipelined"
+    # local plans have no collective to hide
+    assert plan(B, impl="fused", tk=4).describe()["overlap"] == "off"
+    # explicit override sticks (and is a distinct cached plan)
+    t_off = plan(B, impl="fused", mesh=mesh, axis=("data",), overlap="off")
+    assert t_off.describe()["overlap"] == "off" and t_off is not t
+
+    ex = t.executor()
+    V = t.V
+    for n in batch_sizes:
+        fhats = np.stack([soft.random_coeffs(B, seed=300 + s)
+                          for s in range(n)])
+        packed = parallel.dense_to_packed_batch(t.soft_plan, fhats)
+        st_off = dict(launches=0, transforms=0, padded_lanes=0)
+        st_pipe = dict(launches=0, transforms=0, padded_lanes=0)
+        f_off = np.asarray(ex.inverse_batch(packed, overlap="off",
+                                            stats=st_off))
+        f_pipe = np.asarray(ex.inverse_batch(packed, overlap="pipelined",
+                                             stats=st_pipe))
+        np.testing.assert_array_equal(
+            f_pipe, f_off, err_msg=f"pipelined inverse n={n} not bitwise")
+        assert st_pipe == st_off == {
+            "launches": -(-n // V), "transforms": n,
+            "padded_lanes": -(-n // V) * V - n}, (st_off, st_pipe)
+        b_off = np.asarray(ex.forward_batch(jnp.asarray(f_off),
+                                            overlap="off"))
+        b_pipe = np.asarray(ex.forward_batch(jnp.asarray(f_off),
+                                             overlap="pipelined"))
+        np.testing.assert_array_equal(
+            b_pipe, b_off, err_msg=f"pipelined forward n={n} not bitwise")
+    # the plan's own batch executors route through the pipelined default
+    t.reset_stats()
+    fhats = np.stack([soft.random_coeffs(B, seed=400 + s) for s in range(8)])
+    fb = np.asarray(t.inverse_batch(fhats))
+    assert t.stats["launches"] == -(-8 // V)
+    f_off = np.asarray(t_off.inverse_batch(fhats))
+    np.testing.assert_array_equal(fb, f_off,
+                                  err_msg="plan-routed pipelined batch")
+
+
 def check_mesh_schedule_resolution(mesh):
     # per-mesh measured tuning: the sweep runs on the per-device cluster
     # shard and the winner is cached under the mesh-shape key
@@ -164,6 +215,7 @@ def main():
     check_lane_packed_batches(t_f, t_local)
     check_shim_parity(t_f, fhat)
     check_sharded_correlation(mesh)
+    check_overlap_modes(mesh)
     check_mesh_schedule_resolution(mesh)
     print("DIST_PLAN_OK")
 

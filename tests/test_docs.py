@@ -1,0 +1,49 @@
+"""Docs-consistency check: every backtick-quoted dotted ``repro.*``
+name in docs/ARCHITECTURE.md is a live API reference -- it must import
+(module) or resolve by attribute walk (class / function / method).
+Renaming or removing a public symbol without updating the architecture
+doc fails this test, and with it CI."""
+import importlib
+import pathlib
+import re
+
+import pytest
+
+DOC = pathlib.Path(__file__).resolve().parents[1] / "docs" / "ARCHITECTURE.md"
+_SYM = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def _documented_symbols():
+    # a missing doc must FAIL the exists-test below, not error pytest
+    # collection (this function runs inside the parametrize decorator)
+    if not DOC.is_file():
+        return []
+    return sorted(set(_SYM.findall(DOC.read_text())))
+
+
+def _resolve(dotted: str):
+    """Import the longest module prefix, then walk attributes."""
+    parts = dotted.split(".")
+    err = None
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ImportError as e:
+            err = e
+            continue
+        for attr in parts[split:]:
+            obj = getattr(obj, attr)
+        return obj
+    raise ImportError(f"no importable prefix of {dotted!r}: {err}")
+
+
+def test_architecture_doc_exists_and_names_symbols():
+    assert DOC.is_file(), "docs/ARCHITECTURE.md is missing"
+    syms = _documented_symbols()
+    # the doc is only a consistency net if it actually names the API
+    assert len(syms) >= 20, f"suspiciously few documented symbols: {syms}"
+
+
+@pytest.mark.parametrize("dotted", _documented_symbols() or ["repro.plan"])
+def test_documented_symbol_resolves(dotted):
+    _resolve(dotted)  # raises ImportError / AttributeError on a stale doc

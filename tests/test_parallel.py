@@ -166,3 +166,114 @@ def test_autotune_mesh_key_requires_recurrence_impl():
     plan = _balanced_plan(8, 2)
     with pytest.raises(ValueError, match="onthefly"):
         autotune.autotune_dwt(plan, "dense", n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered overlap pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_chunks", [1, 2, 3, 5])
+def test_pipeline_two_slot_rotation(n_chunks):
+    """The fori_loop-carried buffer rotates between exactly two slots:
+    each step's staged collective writes the slot the NEXT step reads,
+    never the slot the concurrent kernel launch is reading."""
+    steps = parallel.pipeline_steps(n_chunks)
+    slots = parallel.pipeline_slots(n_chunks)
+    assert len(steps) == len(slots) == n_chunks + 1
+    # prologue stages chunk 0, epilogue computes the last chunk
+    assert steps[0] == (("collective", 0),) and slots[0] == (None, 0)
+    assert steps[-1] == (("compute", n_chunks - 1),)
+    assert slots[-1] == ((n_chunks - 1) % 2, None)
+    for i, (step, (read, write)) in enumerate(
+            list(zip(steps, slots))[1:-1], start=1):
+        # interior step: collective for chunk i, compute for chunk i-1
+        assert step == (("collective", i), ("compute", i - 1))
+        # two-slot invariant: write slot is NOT the read slot, and chunk
+        # c always lives in slot c % 2
+        assert read == (i - 1) % 2 and write == i % 2 and read != write
+    # every chunk's collective precedes its compute by exactly one step
+    coll = {c: s for s, halves in enumerate(steps)
+            for kind, c in halves if kind == "collective"}
+    comp = {c: s for s, halves in enumerate(steps)
+            for kind, c in halves if kind == "compute"}
+    assert set(coll) == set(comp) == set(range(n_chunks))
+    assert all(comp[c] == coll[c] + 1 for c in range(n_chunks))
+
+
+def test_pipeline_steps_rejects_empty():
+    with pytest.raises(ValueError, match="n_chunks"):
+        parallel.pipeline_steps(0)
+    with pytest.raises(ValueError, match="n_chunks"):
+        parallel.pipeline_slots(0)
+
+
+def test_overlap_mode_validation():
+    plan = _balanced_plan(8, 1, pad_to=4)
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="overlap"):
+        parallel.DistExecutor(plan, mesh, ("data",), overlap="always")
+    ex = parallel.dist_executor(plan, mesh, ("data",))
+    with pytest.raises(ValueError, match="overlap"):
+        ex.inverse_batch(np.zeros((2, plan.n_padded, 8,
+                                   plan.gather_m.shape[1])),
+                         overlap="bogus")
+
+
+def test_pipelined_batch_matches_serial_single_shard():
+    """overlap="pipelined" is a SCHEDULE change, not an arithmetic one:
+    on the 1-shard mesh the pipelined batch is bitwise equal to the
+    serial per-chunk launches (multi-device parity lives in
+    tests/progs/dist_plan.py), and the jitted pipeline body really is a
+    fori_loop with the collective inside it."""
+    import jax
+    B = 8
+    mesh = make_mesh((1,), ("data",))
+    plan = _balanced_plan(B, 1, pad_to=4)
+    ex = parallel.DistExecutor(plan, mesh, ("data",), lane_width=2,
+                               overlap="pipelined")
+    assert ex.overlap == "pipelined"
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(B, seed=s))
+                       for s in range(5)])
+    packed = parallel.dense_to_packed_batch(plan, fhats)
+
+    stats = dict(launches=0, transforms=0, padded_lanes=0)
+    pipe = np.asarray(ex.inverse_batch(packed, stats=stats))
+    # launch accounting identical to the serial path: ceil(5/2) chunks
+    assert stats == {"launches": 3, "transforms": 5, "padded_lanes": 1}
+    off = np.asarray(ex.inverse_batch(packed, overlap="off"))
+    np.testing.assert_array_equal(pipe, off)
+
+    grids = jnp.asarray(off)
+    np.testing.assert_array_equal(
+        np.asarray(ex.forward_batch(grids)),            # default: pipelined
+        np.asarray(ex.forward_batch(grids, overlap="off")))
+
+    # structural: the pipelined callable lowers to a carried loop (scan
+    # for the static trip count; while if jax keeps it symbolic) whose
+    # body holds the all-to-all -- i.e. the interleaving of
+    # pipeline_steps is what actually compiles.  3 chunks so the loop
+    # body is not inlined away (fori_loop unrolls a trip count of 1).
+    p = plan
+    three = jnp.concatenate([packed, packed[:1]])      # 6 = 3 chunks of V=2
+    jaxpr = str(jax.make_jaxpr(ex._inverse_pipe_call())(
+        p.reflected, p.sign, p.sign, p.gather_m, p.gather_mp, p.parity,
+        three.reshape(3, 2, *packed.shape[1:]), *ex._lid.operands))
+    loop_body = jaxpr.split("scan[" if "scan[" in jaxpr else "while[", 1)[-1]
+    assert ("scan[" in jaxpr or "while[" in jaxpr) and \
+        "all_to_all" in loop_body
+
+
+def test_autotune_overlap_key_segment():
+    """The /O{mode} cache-key segment keeps overlapped and serial
+    schedules apart (and the /S{n} mesh segment is still there)."""
+    from repro.kernels import autotune
+    plan = _balanced_plan(8, 2)
+    limit = autotune.vmem_limit_bytes()
+    k_off = autotune._key(plan, "fused", 2, limit, 2)
+    k_pipe = autotune._key(plan, "fused", 2, limit, 2, overlap="pipelined")
+    assert k_off.endswith("/S2/Ooff") and k_pipe.endswith("/S2/Opipelined")
+    assert k_off != k_pipe and k_off.rsplit("/O", 1)[0] == \
+        k_pipe.rsplit("/O", 1)[0]
+    # static heuristic: mesh plans pipeline, single-shard plans don't
+    assert autotune.static_overlap(1) == "off"
+    assert autotune.static_overlap(2) == "pipelined"
