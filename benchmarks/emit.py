@@ -1,0 +1,79 @@
+"""Shared BENCH_<section>.json emission for the cross-PR perf history.
+
+Every benchmark section used to invent its own output path/shape; this
+module gives them ONE schema.  A root artifact is
+
+    {"section": str, "sha": str, "schema_version": 1,
+     "rows": [{"section": ..., "sha": ..., <section fields>}, ...]}
+
+written to BENCH_<section>.json at the repo root (committed baselines sit
+next to the code, so a later PR's run can be diffed against them).  Rows
+are tagged with the section name and the current git SHA so concatenated
+histories from many PRs stay self-describing.
+
+:func:`check_schema` is the schema-loss guard CI runs against the
+committed baseline: fresh rows may ADD fields (the history is
+append-only) but may not silently drop any field the baseline had.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    """Current commit (short); "unknown" outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def tag_rows(section: str, rows: list) -> list[dict]:
+    """Tag dict rows with section + git SHA (non-dict rows are dropped:
+    some sections return tuples for their own printing)."""
+    sha = git_sha()
+    return [dict(r, section=section, sha=sha)
+            for r in rows if isinstance(r, dict)]
+
+
+def emit_root_json(section: str, rows: list, out=None) -> pathlib.Path:
+    """Write BENCH_<section>.json at the repo root (or ``out``) and
+    return the path written."""
+    tagged = tag_rows(section, rows)
+    doc = {"section": section, "sha": git_sha(),
+           "schema_version": SCHEMA_VERSION, "rows": tagged}
+    path = REPO_ROOT / f"BENCH_{section}.json" if out is None \
+        else pathlib.Path(out)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def check_schema(rows: list, baseline_path) -> list[str]:
+    """Schema-loss guard: every field that appears in the committed
+    baseline's rows must appear in some fresh row.  Returns a list of
+    failure strings (empty = pass); a missing/unreadable baseline is a
+    pass (first run seeds it)."""
+    path = pathlib.Path(baseline_path)
+    try:
+        base = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return []
+    failures = []
+    fresh = tag_rows(base.get("section", "?"), rows)
+    if not fresh:
+        failures.append("no fresh rows emitted")
+        return failures
+    base_keys = set().union(*(r.keys() for r in base.get("rows", [{}])))
+    fresh_keys = set().union(*(r.keys() for r in fresh))
+    lost = sorted(base_keys - fresh_keys)
+    if lost:
+        failures.append(f"schema fields lost vs {path.name}: {lost}")
+    return failures

@@ -60,6 +60,48 @@ def run(bandwidths=(16, 32, 64), runs=3, fast=False):
     return rows
 
 
+def precision_rows(bandwidths=(16, 32), fast=False):
+    """Per-(B, precision) streaming error table: the measured fp32-vs-bf16
+    deviation of the fused streaming kernel, validated against the static
+    gate in kernels.autotune.PRECISION_ERROR_BOUNDS.  This table is what
+    justifies static_precision()'s bf16 engagement threshold; a bound
+    violation here means the heuristic would ship wrong answers, so it is
+    a hard failure (SystemExit 1), not a report line.
+    """
+    import jax.numpy as jnp
+    from repro import plan
+    from repro.kernels import autotune
+
+    if fast:
+        bandwidths = (16,)
+    rows, violations = [], []
+    for B in bandwidths:
+        fhat = soft.random_coeffs(B, seed=0).astype(np.complex64)
+        lchunk = max(1, B // 4)
+        t32 = plan(B, dtype=jnp.float32, impl="fused", lchunk=lchunk)
+        t16 = plan(B, dtype=jnp.float32, impl="fused", lchunk=lchunk,
+                   precision="bf16")
+        f32, f16 = t32.inverse(fhat), t16.inverse(fhat)
+        inv_rel = float(np.abs(np.asarray(f16) - np.asarray(f32)).max()
+                        / np.abs(np.asarray(f32)).max())
+        b32, b16 = t32.forward(f32), t16.forward(f32)
+        fwd_rel = float(np.abs(np.asarray(b16) - np.asarray(b32)).max()
+                        / np.abs(np.asarray(b32)).max())
+        bound = autotune.PRECISION_ERROR_BOUNDS[B]
+        rows.append({"B": B, "precision": "bf16", "lchunk": lchunk,
+                     "fwd_rel_err": fwd_rel, "inv_rel_err": inv_rel,
+                     "bound": bound})
+        if max(fwd_rel, inv_rel) > bound:
+            violations.append(
+                f"B={B}: bf16 rel err {max(fwd_rel, inv_rel):.2e} exceeds "
+                f"PRECISION_ERROR_BOUNDS gate {bound:.2e}")
+    if violations:
+        for v in violations:
+            print("FAIL:", v)
+        raise SystemExit(1)
+    return rows
+
+
 PAPER = {32: (1.10e-14, 7.91e-13), 64: (2.79e-14, 3.08e-12),
          128: (6.23e-14, 1.89e-11)}
 
@@ -73,7 +115,14 @@ def main(fast=False):
         pa, pr = PAPER.get(r["B"], (float("nan"),) * 2)
         print(f"{r['B']},{dt},{r['abs_err_mean']:.2e},{r['rel_err_mean']:.2e},"
               f"{pa:.2e},{pr:.2e},{r.get('roundtrip_s', 0):.3f}")
-    return rows
+    prows = precision_rows(fast=fast)
+    print("# precision ladder (fused streaming, fp32 vs bf16)")
+    print("B,precision,lchunk,fwd_rel_err,inv_rel_err,bound")
+    for r in prows:
+        print(f"{r['B']},{r['precision']},{r['lchunk']},"
+              f"{r['fwd_rel_err']:.2e},{r['inv_rel_err']:.2e},"
+              f"{r['bound']:.2e}")
+    return rows + prows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,199 @@
+"""Paper-scale forward/inverse SOFT benchmark (the paper's Tables 2-3
+shape): per bandwidth, run FSOFT + iFSOFT under the reference, monolithic
+fused, and l-chunked streaming (fp32 + bf16) schedules, and emit
+speedup/efficiency rows as BENCH_paper_scale.json at the repo root --
+the seed of the cross-PR perf history.
+
+    PYTHONPATH=src python benchmarks/paper_scale.py --max-B 64
+
+Structural guarantees (exit 1 on violation, so CI can smoke this):
+
+  * forward AND inverse rows exist for every bandwidth run;
+  * the streaming fp32 schedule is BITWISE equal to the monolithic fused
+    kernel (same recurrence ops, same chunk-accumulation order);
+  * the streaming bf16 schedule's relative error stays under the
+    per-bandwidth gate in kernels.autotune.PRECISION_ERROR_BOUNDS;
+  * the streaming schedule's VMEM-live coefficient tile
+    (``est_live_coeff_bytes``) is strictly smaller than the monolithic
+    schedule's at the same bandwidth.
+
+Bandwidths above the host's memory (the SoftPlan still materializes the
+dense clustered Wigner table -- the remaining O(B^3) host cliff) are
+skipped LOUDLY, never silently: every skip prints its reason.
+
+Interpret-mode CPU timings are indicative (the streaming grid runs nL
+serialized Pallas grid steps that a TPU would pipeline); the speedup
+column is the cross-PR tracked quantity, the bitwise/error columns are
+exact everywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):                   # standalone execution
+    _ROOT = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_ROOT))
+    sys.path.insert(0, str(_ROOT / "src"))
+
+import numpy as np
+
+LADDER = (16, 32, 64, 128, 256, 512)
+LCHUNK_FRACTION = 4          # streaming rows run lchunk = B / 4
+
+
+def _phys_mem_bytes() -> int | None:
+    try:
+        return os.sysconf("SC_PHYS_PAGES") * os.sysconf("SC_PAGE_SIZE")
+    except (ValueError, OSError, AttributeError):
+        return None
+
+
+def _est_host_bytes(B: int, itemsize: int = 4) -> int:
+    """Host-side residency estimate BEFORE building anything: the
+    clustered SoftPlan's dense (K, L, J) Wigner table dominates."""
+    K = B * (B + 1) // 2            # fundamental pairs ~ cluster count
+    return K * B * (2 * B) * itemsize + 2 * (2 * B) ** 3 * itemsize
+
+
+def _time(fn, *args, reps=1):
+    import jax
+    jax.block_until_ready(fn(*args))            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(max_B=64, fast=False, reps=None):
+    """Returns (rows, failures)."""
+    import jax.numpy as jnp
+    from repro import plan as plan_mod
+    from repro.kernels import autotune
+
+    ladder = [B for B in ((16, 32) if fast else LADDER) if B <= max_B]
+    mem = _phys_mem_bytes()
+    rows, failures = [], []
+    rng = np.random.default_rng(0)
+    for B in ladder:
+        if mem is not None and _est_host_bytes(B) > mem // 2:
+            print(f"SKIP B={B}: est. host residency "
+                  f"{_est_host_bytes(B) / 2**30:.1f} GiB > half of "
+                  f"{mem / 2**30:.1f} GiB physical memory")
+            continue
+        n_reps = reps if reps is not None else (1 if B >= 64 else 2)
+        lchunk = max(1, B // LCHUNK_FRACTION)
+        schedules = [
+            ("reference", dict(impl="reference", V=2)),
+            ("fused", dict(impl="fused", V=2)),
+            ("fused_stream", dict(impl="fused", V=2, lchunk=lchunk)),
+            ("fused_stream_bf16", dict(impl="fused", V=2, lchunk=lchunk,
+                                       precision="bf16")),
+        ]
+        f = (rng.normal(size=(2 * B,) * 3)
+             + 1j * rng.normal(size=(2 * B,) * 3)).astype(np.complex64)
+        f2 = np.stack([f, f[::-1]])
+        outs, ref_t = {}, {}
+        for name, kw in schedules:
+            t = plan_mod.plan(B, dtype=jnp.float32, **kw)
+            d = t.describe()
+            fwd_t = _time(t.forward, f, reps=n_reps)
+            fhat = np.asarray(t.forward(f))
+            inv_t = _time(t.inverse, fhat, reps=n_reps)
+            outs[name] = (fhat, np.asarray(t.inverse(fhat)))
+            # lane amortization: V transforms on one packed launch vs V
+            # single launches (> 1 = packing pays)
+            eff_f = 2 * fwd_t / _time(t.forward_batch, f2, reps=n_reps)
+            fhat2 = np.stack([fhat, outs[name][0]])
+            eff_i = 2 * inv_t / _time(t.inverse_batch, fhat2, reps=n_reps)
+            if name == "reference":
+                ref_t = {"forward": fwd_t, "inverse": inv_t}
+            for direction, wall, eff in (("forward", fwd_t, eff_f),
+                                         ("inverse", inv_t, eff_i)):
+                err = None
+                if name != "fused" and "fused" in outs:
+                    mono = outs["fused"][0 if direction == "forward" else 1]
+                    mine = outs[name][0 if direction == "forward" else 1]
+                    err = float(np.abs(mine - mono).max())
+                rows.append({
+                    "B": B, "impl": name, "direction": direction,
+                    "V": d["V"], "lchunk": d["lchunk"],
+                    "precision": d["precision"],
+                    "wall_s": wall,
+                    "speedup_vs_reference": ref_t[direction] / wall,
+                    "efficiency": eff,
+                    "max_abs_err_vs_fused": err,
+                    "est_live_coeff_bytes": d["est_live_coeff_bytes"],
+                    "est_peak_hbm_bytes": d["est_peak_hbm_bytes"],
+                })
+        # ---- structural checks ------------------------------------------
+        dirs = {(r["impl"], r["direction"]) for r in rows if r["B"] == B}
+        for name, _ in schedules:
+            for direction in ("forward", "inverse"):
+                if (name, direction) not in dirs:
+                    failures.append(f"B={B}: missing {name}/{direction} row")
+        for i, (a, b) in enumerate(zip(outs["fused_stream"], outs["fused"])):
+            if not np.array_equal(a, b):
+                failures.append(
+                    f"B={B}: streaming fp32 {('forward', 'inverse')[i]} is "
+                    f"not bitwise-equal to the monolithic fused kernel")
+        bound = autotune.PRECISION_ERROR_BOUNDS[B]
+        for i, (a, b) in enumerate(zip(outs["fused_stream_bf16"],
+                                       outs["fused"])):
+            rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-30)
+            if rel > bound:
+                failures.append(
+                    f"B={B}: bf16 {('forward', 'inverse')[i]} rel err "
+                    f"{rel:.2e} over the {bound:.2e} error-table gate")
+        live = {r["impl"]: r["est_live_coeff_bytes"]
+                for r in rows if r["B"] == B}
+        if not live["fused_stream"] < live["fused"]:
+            failures.append(
+                f"B={B}: streaming live coeff bytes {live['fused_stream']} "
+                f"not below monolithic {live['fused']}")
+        print(f"[B={B}: {len([r for r in rows if r['B'] == B])} rows, "
+              f"lchunk={lchunk}, live coeff {live['fused_stream']}B vs "
+              f"{live['fused']}B monolithic]")
+    return rows, failures
+
+
+def main(fast=False, max_B=64, out=None, check_against=None, reps=None):
+    from benchmarks import emit
+
+    rows, failures = run(max_B=max_B, fast=fast, reps=reps)
+    print("# paper_scale (forward+inverse speedup/efficiency)")
+    print("B,impl,direction,wall_s,speedup_vs_reference,efficiency,"
+          "lchunk,precision,live_coeff_B")
+    for r in rows:
+        print(f"{r['B']},{r['impl']},{r['direction']},{r['wall_s']:.4f},"
+              f"{r['speedup_vs_reference']:.2f},{r['efficiency']:.2f},"
+              f"{r['lchunk']},{r['precision']},{r['est_live_coeff_bytes']}")
+    if check_against:
+        failures += emit.check_schema(rows, check_against)
+    path = emit.emit_root_json("paper_scale", rows, out=out)
+    print(f"wrote {path} ({len(rows)} rows, sha {emit.git_sha()})")
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        raise SystemExit(1)
+    print("structural checks: OK")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-B", type=int, default=64)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_paper_scale.json at "
+                         "the repo root)")
+    ap.add_argument("--check-against", default=None,
+                    help="committed baseline JSON for the schema-loss guard")
+    args = ap.parse_args()
+    main(fast=args.fast, max_B=args.max_B, out=args.out,
+         check_against=args.check_against, reps=args.reps)

@@ -14,6 +14,12 @@ Sections:
   correlation      SO(3) rotational matching: bank + service on fused lanes
   lm_step          reduced-config LM train/decode step timings
   roofline         per-cell roofline terms from dry-run artifacts
+  paper_scale      paper-scale forward+inverse ladder (streaming + bf16
+                   schedules vs reference), seeds BENCH_paper_scale.json
+
+With --emit-root-json, every section whose main() returns dict rows also
+writes a BENCH_<section>.json artifact at the repo root in the shared
+benchmarks.emit schema (rows tagged with git SHA + section).
 """
 from __future__ import annotations
 
@@ -76,7 +82,7 @@ def lm_step(fast=False):
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
             "dwt_schedules", "plan", "distributed", "correlation", "lm_step",
-            "roofline")
+            "roofline", "paper_scale")
 
 
 def main() -> None:
@@ -84,6 +90,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--section", default=None, choices=SECTIONS)
     ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--emit-root-json", action="store_true",
+                    help="write BENCH_<section>.json at the repo root for "
+                         "sections that return rows (shared emit schema)")
     args = ap.parse_args()
 
     import jax
@@ -94,35 +103,47 @@ def main() -> None:
     for name in wanted:
         t0 = time.time()
         print(f"\n===== {name} =====")
+        rows = None
         if name == "error_table":
             from benchmarks import error_table
-            error_table.main(fast=args.fast)
+            rows = error_table.main(fast=args.fast)
         elif name == "workbalance":
             from benchmarks import workbalance
-            workbalance.main(fast=args.fast)
+            rows = workbalance.main(fast=args.fast)
         elif name == "soft_runtime":
             from benchmarks import soft_runtime
-            soft_runtime.main(fast=args.fast)
+            rows = soft_runtime.main(fast=args.fast)
         elif name == "kernel_schedule":
             from benchmarks import kernel_schedule
-            kernel_schedule.main(fast=args.fast)
+            rows = kernel_schedule.main(fast=args.fast)
         elif name == "dwt_schedules":
             from benchmarks import dwt_schedules
-            dwt_schedules.main(fast=args.fast)
+            rows = dwt_schedules.main(fast=args.fast)
         elif name == "plan":
             from benchmarks import planner
-            planner.main(fast=args.fast)
+            rows = planner.main(fast=args.fast)
         elif name == "distributed":
             from benchmarks import distributed
-            distributed.main(fast=args.fast)
+            rows = distributed.main(fast=args.fast)
         elif name == "correlation":
             from benchmarks import correlation
-            correlation.main(fast=args.fast)
+            rows = correlation.main(fast=args.fast)
         elif name == "lm_step":
-            lm_step(fast=args.fast)
+            rows = lm_step(fast=args.fast)
         elif name == "roofline":
             from benchmarks import roofline
-            roofline.main(args.artifacts)
+            rows = roofline.main(args.artifacts)
+        elif name == "paper_scale":
+            from benchmarks import paper_scale
+            rows = paper_scale.main(fast=args.fast)
+        if args.emit_root_json and name != "paper_scale":
+            # paper_scale emits its own artifact (plus structural checks)
+            from benchmarks import emit
+            tagged = emit.tag_rows(name, rows or [])
+            if tagged:
+                print(f"-> {emit.emit_root_json(name, rows)}")
+            else:
+                print(f"-> no dict rows from {name}; nothing emitted")
         print(f"[{name}: {time.time() - t0:.1f}s]")
     print(f"\ntotal {time.time() - t_all:.1f}s")
 

@@ -28,6 +28,7 @@ __all__ = [
     "wigner_d_table",
     "fundamental_pairs",
     "wigner_d_fundamental",
+    "wigner_window_table",
 ]
 
 
@@ -239,3 +240,57 @@ def wigner_d_fundamental(B: int, beta: np.ndarray | None = None,
         pairs.flags.writeable = False
         _FUND_CACHE[key] = (table, pairs)
     return table, pairs
+
+
+def wigner_window_table(B: int, lchunk: int,
+                        beta: np.ndarray | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Chunk-boundary recurrence windows on the fundamental domain.
+
+    Returns (windows, pairs) with windows of shape (nL, 2, P, J),
+    nL = B/lchunk: windows[c] holds the (d_{l-1}, d_l) three-term-
+    recurrence state at the start of degree l = c*lchunk for every
+    fundamental pair p (zeros where the pair has not activated, i.e.
+    l <= m_p); windows[0] is all zeros.  This is the CHUNKED table
+    emission for the streaming schedules: marching the recurrence with
+    O(P * J) working state and emitting only nL * 2 rows per pair, it
+    never materializes the (P, B, J) dense table -- the float64 numpy
+    oracle that :func:`repro.kernels.streaming.build_windows` (the
+    kernel-dtype jnp twin on the clustered axis) is tested against.
+    """
+    from . import quadrature
+
+    lchunk = int(lchunk)
+    if not 1 <= lchunk <= B or B % lchunk:
+        raise ValueError(f"lchunk={lchunk} must divide B={B}")
+    beta = quadrature.betas(B) if beta is None \
+        else np.asarray(beta, dtype=np.float64)
+    J = len(beta)
+    pairs = fundamental_pairs(B)
+    P = len(pairs)
+    m, mp = pairs[:, 0].astype(np.int64), pairs[:, 1].astype(np.int64)
+    seeds = np.zeros((P, J))
+    for p in range(P):
+        seeds[p] = wigner_seed(int(m[p]), int(mp[p]), beta)
+
+    nL = B // lchunk
+    windows = np.zeros((nL, 2, P, J))
+    cb = np.cos(beta)[None, :]
+    d_prev = np.zeros((P, J))
+    d_cur = np.zeros((P, J))
+    # boundaries past (nL-1)*lchunk are never read; stop the march there.
+    for l in range((nL - 1) * lchunk):
+        starting = (m == l)
+        if starting.any():
+            d_cur[starting] = seeds[starting]
+            d_prev[starting] = 0.0
+        active = (m <= l)
+        A, mu, C = recurrence_coeffs(np.float64(l), m.astype(np.float64),
+                                     mp.astype(np.float64))
+        d_next = A[:, None] * (cb - mu[:, None]) * d_cur - C[:, None] * d_prev
+        d_prev = np.where(active[:, None], d_cur, 0.0)
+        d_cur = np.where(active[:, None], d_next, 0.0)
+        if (l + 1) % lchunk == 0:
+            windows[(l + 1) // lchunk, 0] = d_prev
+            windows[(l + 1) // lchunk, 1] = d_cur
+    return windows, pairs

@@ -5,6 +5,9 @@
   dwt_fused.py         BOTH levers at once: ragged l-range (zero-triangle
                        skipped via scalar-prefetch l0s) + on-the-fly rows
                        (no d-table in HBM) + V-wide transform batching
+  streaming.py         the fused family at paper-scale B: l-chunked
+                       coefficient staging (HBM-resident stacks, two-row
+                       recurrence windows) + bf16 storage precision
   folded_attention.py  causal flash attention on the paper's folded grid
   autotune.py          measured (tk, tl, tj, V) sweep, on-disk cache
   ops.py               jit'd wrappers (auto interpret-mode on CPU)
@@ -43,7 +46,15 @@ between (``impl=...`` forces one):
             impl="auto" resolves to (statically) for every B.  batch=V
             packs V transforms onto the lane axis (C2 = V*C*2): one
             launch, each generated d-row reused V times
-            (Transform.forward_batch / inverse_batch).
+            (Transform.forward_batch / inverse_batch).  With
+            ``lchunk``/``precision="bf16"`` the planner swaps in the
+            STREAMING members (streaming.py): only a (TK, lchunk, C2)
+            coefficient tile is VMEM-live (the stack stays HBM-resident,
+            staged through double-buffered slots), the recurrence resumes
+            from per-chunk two-row windows, and bf16 halves the stored
+            window table + feeds bf16 contraction rows while state and
+            accumulation stay in the plan dtype.  Keyed by /L{lchunk}/
+            P{precision}; auto-engaged when no monolithic V fits VMEM.
   reference Planner-only pseudo-schedule: the pure-jnp einsum path
             (differentiable, runs anywhere) -- the correctness oracle.
 
@@ -68,4 +79,4 @@ behind the guidance above, and benchmarks/planner.py smokes the plan
 build/cache/executor path.
 """
 from . import (autotune, dwt, dwt_fused, folded_attention, ops, ref,  # noqa: F401
-               runtime, wigner_rec)
+               runtime, streaming, wigner_rec)

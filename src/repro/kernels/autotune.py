@@ -4,7 +4,8 @@ OpenFFT's lesson (arXiv:1501.07350): an exhaustive-but-cheap measured sweep
 over decompositions is what turns a parallel transform design into actual
 speedup.  This module times real kernel launches for a small candidate set
 of (tk, tl, tj, V) tilings and memoizes the winner on disk keyed by
-(B, dtype, backend, impl, V, vmem_limit, n_shards, overlap) -- one sweep
+(B, dtype, backend, impl, V, vmem_limit, n_shards, overlap, lchunk,
+precision) -- one sweep
 per machine/shape/mesh-decomposition, then every subsequent make_dwt_fn
 call reads the cache.  n_shards > 1 tunes the per-device cluster shard
 of a mesh plan (see repro.plan: mesh plans resolve their schedule
@@ -38,14 +39,42 @@ import jax.numpy as jnp
 from . import ops
 
 __all__ = ["autotune_dwt", "autotune_overlap", "static_overlap",
-           "tuned_dwt_fn", "tuned_idwt_fn", "cache_path",
-           "candidate_tiles", "estimate_vmem_bytes", "vmem_limit_bytes"]
+           "static_precision", "static_lchunk", "tuned_dwt_fn",
+           "tuned_idwt_fn", "cache_path", "candidate_tiles",
+           "estimate_vmem_bytes", "estimate_hbm_bytes",
+           "estimate_live_coeff_bytes", "vmem_limit_bytes",
+           "PRECISIONS", "PRECISION_ERROR_BOUNDS"]
 
 _DEF_CACHE = "~/.cache/repro/autotune.json"
 
 # Conservative per-core VMEM ceiling (TPU cores carry ~16 MB; leave margin
 # for Pallas double-buffering of the streamed operands).
 _DEF_VMEM = 12 * 1024 * 1024
+
+# Mixed-precision schedule policies for the recurrence family.  "fp32"
+# means "the plan dtype" (no down-cast; chunked schedules stay bitwise
+# equal to the monolithic kernel); "bf16" stores the recurrence state and
+# generated d-rows in bfloat16 while coefficients and the contraction
+# accumulate in the plan dtype (see kernels.streaming).
+PRECISIONS = ("fp32", "bf16")
+
+# Measured worst-case RELATIVE error (max |bf16 - fp32| / max |fp32|,
+# worse of forward/inverse) of the bf16-storage schedule per bandwidth,
+# with ~4x headroom over the benchmarks/error_table.py measurements
+# (B <= 64 measured in interpret mode; B >= 128 extrapolated at the
+# observed ~2.6x-per-doubling inverse growth, pending hardware runs).
+# This table GATES the static heuristic: bf16 is only auto-selected at
+# bandwidths with a recorded bound, and the error-table benchmark (and
+# tests/test_streaming.py) fail if a measurement ever exceeds its gate.
+PRECISION_ERROR_BOUNDS = {
+    8: 1.2e-2,
+    16: 1.5e-2,
+    32: 3e-2,
+    64: 8e-2,
+    128: 2e-1,
+    256: 5e-1,
+    512: 1.3e0,
+}
 
 
 def vmem_limit_bytes() -> int:
@@ -58,21 +87,108 @@ def vmem_limit_bytes() -> int:
 
 def estimate_vmem_bytes(impl: str, *, L: int, J: int, C2: int, tk: int,
                         tl: int | None = None, tj: int | None = None,
-                        itemsize: int = 4) -> int:
+                        itemsize: int = 4, lchunk: int | None = None,
+                        precision: str = "fp32") -> int:
     """Static VMEM footprint of one grid step of a candidate tiling.
 
     Recurrence schedules (onthefly/fused) hold seeds + the two recurrence
     state rows (3 * TK * J), the order/cos-beta vectors, the rhs tile
-    (TK * J * C2) and the out tile (TK * L * C2); C2 = V*C*2 grows
-    linearly with lane packing, which is what caps V.  Grid schedules
+    (TK * J * C2) and the coefficient tile; C2 = V*C*2 grows linearly
+    with lane packing, which is what caps V.  Grid schedules
     (dense/ragged) hold a (TK, TL, TJ) d-block plus rhs/out tiles.
+
+    itemsize must be the PLAN dtype's (f64 plans really do hold 8-byte
+    tiles; assuming fp32 under-guards them 2x).  An l-chunked streaming
+    schedule (lchunk != None) shrinks the coefficient tile from
+    TK * L * C2 to TK * lchunk * C2 -- the memory cliff this family
+    exists to cut -- and adds the staged 2 * TK * J window block, which
+    (like the bf16 contraction-row operand) is stored at 2 bytes under
+    precision="bf16".
     """
     if impl in ("onthefly", "fused"):
-        return itemsize * (3 * tk * J + 2 * tk + J
-                           + tk * J * C2 + tk * L * C2)
+        sb = 2 if precision == "bf16" else itemsize
+        lt = L if lchunk is None else lchunk
+        extra = sb * 2 * tk * J if lchunk is not None else 0   # window block
+        if precision == "bf16":
+            extra += 2 * tk * J   # distinct bf16 contraction-row buffer
+        return (itemsize * (3 * tk * J + 2 * tk + J + tk * J * C2
+                            + tk * lt * C2) + extra)
     tl = L if tl is None else tl
     tj = J if tj is None else tj
     return itemsize * (tk * tl * tj + tk * tj * C2 + tk * tl * C2)
+
+
+def estimate_live_coeff_bytes(*, tk: int, L: int, C2: int, itemsize: int = 4,
+                              lchunk: int | None = None) -> int:
+    """Peak VMEM-LIVE coefficient tile of one grid step: TK * L * C2
+    elements for the monolithic fused kernel, TK * lchunk * C2 for a
+    streaming schedule.  This is the number ``Transform.describe()``
+    reports so the lchunk memory win is assertable without hardware."""
+    return tk * (L if lchunk is None else lchunk) * C2 * itemsize
+
+
+def estimate_hbm_bytes(impl: str, *, B: int, K: int, L: int, J: int,
+                       C2: int, itemsize: int = 4,
+                       lchunk: int | None = None,
+                       precision: str = "fp32") -> int:
+    """Estimated peak HBM residency of one transform at bandwidth B.
+
+    Counts the (2B)^3 complex grid (the paper's second memory cliff), the
+    (K, L, C2) coefficient stack and (K, J, C2) beta-grid stack, and the
+    schedule's Wigner working set: the dense/ragged families stream a
+    (K, L, J) table, the recurrence family only seeds (K, J) plus -- for
+    streaming schedules -- the (nL, 2, K, J) chunk-boundary window table
+    (2-byte elements under precision="bf16").  Diagnostic, not an
+    allocator: use it to see WHICH term goes over before launching."""
+    grid = 2 * (2 * B) ** 3 * itemsize            # complex samples (re+im)
+    stacks = (K * L * C2 + K * J * C2) * itemsize
+    if impl in ("onthefly", "fused"):
+        tables = K * J * itemsize                 # seed rows
+        if lchunk is not None:
+            sb = 2 if precision == "bf16" else itemsize
+            tables += (L // lchunk) * 2 * K * J * sb
+    else:
+        tables = K * L * J * itemsize             # dense Wigner table
+    return grid + stacks + tables
+
+
+def static_precision(B: int, precision: str | None = None) -> str:
+    """Resolve a schedule precision: an explicit choice is validated and
+    honored; "auto"/None picks bf16 storage only at paper-scale
+    bandwidths (B >= 128) whose error bound is recorded in
+    :data:`PRECISION_ERROR_BOUNDS` -- the error-table gate -- and fp32
+    (i.e. the plan dtype, bitwise-safe) everywhere else."""
+    if precision not in (None, "auto", *PRECISIONS):
+        raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
+    if precision in PRECISIONS:
+        return precision
+    return "bf16" if B >= 128 and B in PRECISION_ERROR_BOUNDS else "fp32"
+
+
+def static_lchunk(*, L: int, J: int, C2: int, tk: int, itemsize: int = 4,
+                  precision: str = "fp32",
+                  limit: int | None = None) -> int | None:
+    """Static l-chunk heuristic for the fused family: stay monolithic
+    (None) when the full (TK, L, C2) coefficient tile fits the VMEM
+    ceiling, otherwise the LARGEST divisor lchunk of L that fits (largest
+    chunk = fewest window reloads + longest in-kernel recurrence runs).
+    Raises when not even lchunk = 1 fits (shrink tk or V instead)."""
+    limit = vmem_limit_bytes() if limit is None else limit
+
+    def est(lc):
+        return estimate_vmem_bytes("fused", L=L, J=J, C2=C2, tk=tk,
+                                   itemsize=itemsize, lchunk=lc,
+                                   precision=precision)
+
+    if est(None) <= limit:
+        return None
+    for lc in sorted((d for d in range(1, L) if L % d == 0), reverse=True):
+        if est(lc) <= limit:
+            return lc
+    raise RuntimeError(
+        f"no l-chunk fits the {limit}-byte VMEM ceiling at L={L}, J={J}, "
+        f"C2={C2}, tk={tk} (even lchunk=1; shrink tk/V or raise "
+        f"$REPRO_VMEM_BYTES)")
 
 
 def cache_path() -> pathlib.Path:
@@ -134,7 +250,8 @@ def _time_fn(fn, *args, reps: int = 3) -> float:
 
 
 def _key(plan, impl: str, V, limit: int, n_shards: int = 1,
-         overlap: str = "off") -> str:
+         overlap: str = "off", lchunk: int | None = None,
+         precision: str = "fp32") -> str:
     # the VMEM ceiling is part of the key: a winner measured under a
     # tight $REPRO_VMEM_BYTES (guard skipped the wide-V candidates) must
     # not be served when the budget is back to normal, and vice versa.
@@ -143,9 +260,14 @@ def _key(plan, impl: str, V, limit: int, n_shards: int = 1,
     # lesson is that the winning tile is decomposition-shape-specific.
     # The /O{mode} segment keys the distributed execution mode, so a
     # schedule timed under the double-buffered overlap pipeline never
-    # collides with one timed under serial per-chunk launches.
+    # collides with one timed under serial per-chunk launches.  /L{n}
+    # (0 = monolithic) and /P{prec} key the streaming l-chunk and the
+    # storage precision: a bf16 or chunked schedule runs a different
+    # kernel, so its measurements must never be served to -- or poisoned
+    # by -- the monolithic fp32 schedule of the same shape.
     return (f"{impl}/B{plan.B}/K{plan.n_padded}/{jnp.dtype(plan.d.dtype).name}"
-            f"/{jax.default_backend()}/V{V}/M{limit}/S{n_shards}/O{overlap}")
+            f"/{jax.default_backend()}/V{V}/M{limit}/S{n_shards}/O{overlap}"
+            f"/L{lchunk or 0}/P{precision}")
 
 
 def _local_shard_timer(plan, tk: int, n_shards: int, interpret):
@@ -172,7 +294,8 @@ def _local_shard_timer(plan, tk: int, n_shards: int, interpret):
 def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
                  refresh: bool = False, cache: str | os.PathLike | None = None,
                  interpret=None, vmem_limit: int | None = None,
-                 n_shards: int = 1) -> dict:
+                 n_shards: int = 1, lchunk: int | None = None,
+                 precision: str = "fp32") -> dict:
     """Measure-and-cache the best (tk, tl, tj, V) for one schedule.
 
     Returns {"tk", "tl", "tj", "V", "per_transform_s"}.  Sweeps the
@@ -200,11 +323,17 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
         raise ValueError(
             f"per-mesh autotuning times the fused device-local kernel; "
             f"impl must be 'onthefly' or 'fused', got {impl!r}")
+    if (lchunk is not None or precision == "bf16") and n_shards > 1:
+        raise ValueError(
+            "streaming schedules (lchunk/bf16) are not wired into the "
+            "sharded executor yet; tune them at n_shards=1")
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
     path = pathlib.Path(cache) if cache is not None else cache_path()
     store = _load_cache(path)
     limit = vmem_limit_bytes() if vmem_limit is None else vmem_limit
     key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0], limit,
-               n_shards)
+               n_shards, lchunk=lchunk, precision=precision)
     if not refresh and key in store:
         return store[key]
 
@@ -224,7 +353,8 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
             rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
         for tile in candidate_tiles(K_eff, L, J, impl):
             if estimate_vmem_bytes(impl, L=L, J=J, C2=V * C * 2,
-                                   itemsize=itemsize,
+                                   itemsize=itemsize, lchunk=lchunk,
+                                   precision=precision,
                                    **tile) > limit:
                 n_skipped += 1
                 continue
@@ -234,7 +364,9 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
                                              interpret)
                 else:
                     fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
-                                         batch=None if V == 1 else V, **tile)
+                                         batch=None if V == 1 else V,
+                                         lchunk=lchunk, precision=precision,
+                                         **tile)
                     run = lambda r: fn(plan, r)   # noqa: E731
                 t = _time_fn(run, rhs, reps=reps) / V
             except Exception:   # tiling rejected by the kernel -> skip
@@ -325,20 +457,26 @@ def autotune_overlap(plan, mesh, axis, *, V: int = 1, tk: int | None = None,
 
 
 def tuned_dwt_fn(plan, impl: str = "fused", *, Vs=(1,), interpret=None,
+                 lchunk: int | None = None, precision: str = "fp32",
                  **tune_kw):
     """make_dwt_fn with autotuned tiles (sweeps + caches on first call)."""
-    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret, **tune_kw)
+    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret,
+                       lchunk=lchunk, precision=precision, **tune_kw)
     V = cfg["V"]
     return ops.make_dwt_fn(plan, impl, tk=cfg["tk"], tl=cfg["tl"],
                            tj=cfg["tj"], batch=None if V == 1 else V,
+                           lchunk=lchunk, precision=precision,
                            interpret=interpret)
 
 
 def tuned_idwt_fn(plan, impl: str = "fused", *, Vs=(1,), interpret=None,
+                  lchunk: int | None = None, precision: str = "fp32",
                   **tune_kw):
     """make_idwt_fn sharing the forward sweep's tiling (same data layout)."""
-    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret, **tune_kw)
+    cfg = autotune_dwt(plan, impl, Vs=Vs, interpret=interpret,
+                       lchunk=lchunk, precision=precision, **tune_kw)
     V = cfg["V"]
     return ops.make_idwt_fn(plan, impl, tk=cfg["tk"], tl=cfg["tl"],
                             tj=cfg["tj"], batch=None if V == 1 else V,
+                            lchunk=lchunk, precision=precision,
                             interpret=interpret)

@@ -27,12 +27,13 @@ from repro.core.batched import SoftPlan
 from . import dwt as dwt_kernels
 from . import dwt_fused
 from . import folded_attention as fa
+from . import streaming
 from . import wigner_rec
 from .runtime import default_interpret
 
 __all__ = ["default_interpret", "make_dwt_fn", "make_idwt_fn",
-           "onthefly_inputs", "fused_metadata", "batched_rhs", "pad_lanes",
-           "attention"]
+           "onthefly_inputs", "fused_metadata", "streaming_inputs",
+           "batched_rhs", "pad_lanes", "attention"]
 
 
 def _split_ri(x):
@@ -104,6 +105,30 @@ def fused_metadata(plan: SoftPlan, tk: int):
     return perm, l_start, l0s
 
 
+@functools.lru_cache(maxsize=16)
+def streaming_inputs(plan: SoftPlan, tk: int, lchunk: int, precision: str):
+    """Permuted operands + chunk-boundary windows for the streaming
+    kernels (kernels/streaming.py), memoized by (plan, tk, lchunk,
+    precision) identity.
+
+    The recurrence windows are built ONCE per configuration with the
+    kernel-identical jnp step (streaming.build_windows), on the
+    l-start-sorted cluster order the fused family launches in; bf16
+    precision stores them (and the in-kernel state) as bfloat16.  The
+    window table is the streaming schedule's only HBM-resident Wigner
+    state: (nL, 2, K, J) -- lchunk/2 x smaller than the dense d-table.
+    """
+    seeds, m, mp, cb = onthefly_inputs(plan)
+    perm, _, l0s = fused_metadata(plan, tk)
+    seeds_p, m_p, mp_p = seeds[perm], m[perm], mp[perm]
+    dt = seeds.dtype
+    sdt = jnp.bfloat16 if precision == "bf16" else dt
+    windows = streaming.build_windows(
+        seeds_p, m_p.astype(dt)[:, None], mp_p.astype(dt)[:, None],
+        cb[None, :], L=plan.B, lchunk=lchunk, state_dtype=sdt)
+    return seeds_p, m_p, mp_p, cb, l0s, windows
+
+
 def _wrap_batch(raw, batch):
     """Lift raw(p, rhs2: (K, A, C2)) to the (plan, rhs) dwt_fn contract.
 
@@ -128,16 +153,54 @@ def _wrap_batch(raw, batch):
     return fn
 
 
+def _check_streaming_args(impl, lchunk, precision):
+    """lchunk/precision select the streaming members of the fused family;
+    reject them loudly on the schedules that have no streaming twin."""
+    if precision not in (None, "fp32", "bf16"):
+        raise ValueError(f"precision must be 'fp32' or 'bf16', "
+                         f"got {precision!r}")
+    streaming_on = lchunk is not None or precision == "bf16"
+    if streaming_on and impl != "fused":
+        raise ValueError(
+            f"lchunk/precision='bf16' need the streaming kernels, which "
+            f"exist only for impl='fused' (got impl={impl!r})")
+    return streaming_on
+
+
 def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
-                interpret=None, batch=None):
+                lchunk=None, precision=None, interpret=None, batch=None):
     """Build a dwt_fn(plan, rhs) for core.batched.forward_clustered.
 
     impl: "dense" | "ragged" | "onthefly" | "fused".  batch=V makes the fn
     accept a (V, K, J, C, 2) stack of RHS (core.batched.
     forward_clustered_batch) contracted in ONE kernel launch with V*C*2
-    lanes.
+    lanes.  lchunk (fused only) selects the l-chunked streaming kernel
+    (kernels/streaming.py): HBM-resident coefficients staged as
+    (tk, lchunk, C2) VMEM tiles, recurrence re-seeded per chunk from a
+    two-row window.  precision (fused only): "fp32" (default; compute in
+    the plan dtype) or "bf16" (bf16 recurrence state / d-rows, plan-dtype
+    accumulation; forces the streaming kernel, monolithic has no
+    mixed-precision twin).
     """
     interpret = default_interpret() if interpret is None else interpret
+    if _check_streaming_args(impl, lchunk, precision):
+        prec = precision or "fp32"
+        lchunk = streaming.check_lchunk(plan.B, plan.B if lchunk is None
+                                        else lchunk)
+        tk = min(tk, plan.n_padded)
+        seeds_p, m_p, mp_p, cb, l0s, windows = streaming_inputs(
+            plan, tk, lchunk, prec)
+        perm, _, _ = fused_metadata(plan, tk)
+        inv_perm = np.argsort(perm)
+
+        def raw(p: SoftPlan, rhs2):
+            out = streaming.dwt_streaming(seeds_p, m_p, mp_p, cb,
+                                          rhs2[perm], l0s, windows, B=p.B,
+                                          tk=tk, lchunk=lchunk,
+                                          precision=prec,
+                                          interpret=interpret)
+            return out[inv_perm]
+        return _wrap_batch(raw, batch)
     if impl == "dense":
         def raw(p: SoftPlan, rhs2):
             return dwt_kernels.dwt_dense(p.d, rhs2, tk=tk, tl=tl, tj=tj,
@@ -182,13 +245,32 @@ def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
 
 
 def make_idwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
-                 interpret=None, batch=None):
+                 lchunk=None, precision=None, interpret=None, batch=None):
     """Build an idwt_fn(plan, lhs) for core.batched.inverse_clustered.
 
     impl: "dense" | "onthefly" | "fused"; batch as in make_dwt_fn (lhs
-    gains a leading V axis, packed onto lanes for one launch).
+    gains a leading V axis, packed onto lanes for one launch); lchunk /
+    precision select the streaming inverse (fused only, see make_dwt_fn).
     """
     interpret = default_interpret() if interpret is None else interpret
+    if _check_streaming_args(impl, lchunk, precision):
+        prec = precision or "fp32"
+        lchunk = streaming.check_lchunk(plan.B, plan.B if lchunk is None
+                                        else lchunk)
+        tk = min(tk, plan.n_padded)
+        seeds_p, m_p, mp_p, cb, l0s, windows = streaming_inputs(
+            plan, tk, lchunk, prec)
+        perm, _, _ = fused_metadata(plan, tk)
+        inv_perm = np.argsort(perm)
+
+        def raw(p: SoftPlan, lhs2):
+            out = streaming.idwt_streaming(seeds_p, m_p, mp_p, cb,
+                                           lhs2[perm], l0s, windows, B=p.B,
+                                           tk=tk, lchunk=lchunk,
+                                           precision=prec,
+                                           interpret=interpret)
+            return out[inv_perm]
+        return _wrap_batch(raw, batch)
     if impl == "dense":
         def raw(p: SoftPlan, lhs2):
             return dwt_kernels.idwt_dense(p.d, lhs2, tk=tk, tl=tl, tj=tj,

@@ -95,6 +95,17 @@ class Schedule:
     heuristic by default, or measured on the real mesh under
     ``tune="measure"`` (cached under the ``/O{mode}`` key segment) --
     and always "off" for plans without a mesh.
+
+    ``lchunk`` engages the l-chunked STREAMING fused family
+    (:mod:`repro.kernels.streaming`): None runs the monolithic kernel;
+    an integer divisor of B streams the coefficient stack through
+    (tk, lchunk, C2) VMEM tiles.  The static resolver auto-engages it
+    (largest fitting chunk) when no monolithic lane width fits the VMEM
+    budget.  ``precision`` is the storage precision of the streaming
+    Wigner working set ("fp32" = the plan dtype, bitwise-safe; "bf16" =
+    bf16 window table + bf16 contraction rows, gated by
+    :data:`repro.kernels.autotune.PRECISION_ERROR_BOUNDS`); both are
+    keyed into the autotune cache as /L{lchunk}/P{precision}.
     """
 
     impl: str               # executor schedule (one of IMPLS)
@@ -107,6 +118,8 @@ class Schedule:
     vmem_limit: int         # budget the schedule was resolved under
     n_shards: int = 1       # mesh decomposition the schedule was tuned for
     overlap: str = "off"    # distributed batch mode ("off" | "pipelined")
+    lchunk: int | None = None   # streaming l-chunk (None = monolithic)
+    precision: str = "fp32"     # streaming storage precision
     per_transform_s: float | None = None   # measured (tune="measure") only
 
     @property
@@ -142,8 +155,8 @@ def _resolve_overlap(overlap, n_shards: int) -> str:
 
 
 def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
-                     limit: int, n_shards: int = 1,
-                     overlap=None) -> Schedule:
+                     limit: int, n_shards: int = 1, overlap=None,
+                     lchunk=None, precision=None) -> Schedule:
     """Largest lane width under the VMEM guard, default tiles.
 
     Mesh plans (n_shards > 1) resolve against the per-device cluster
@@ -152,6 +165,16 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     reflects the per-device grid step, not the unsharded one.  The
     distributed batch mode resolves through the static overlap heuristic
     unless the caller fixed it (``overlap="off" | "pipelined"``).
+
+    Streaming resolution (fused, single-shard): an explicit ``lchunk``
+    is honored; with lchunk=None the resolver first tries the monolithic
+    kernel at every lane width, and only when NONE fits the VMEM budget
+    does it auto-engage the streaming family -- widest lane width first,
+    each with its largest fitting chunk (:func:`repro.kernels.autotune.
+    static_lchunk`) -- so existing small-B plans keep their schedules
+    bit-for-bit while paper-scale B stops failing the guard.  The
+    storage precision resolves through :func:`repro.kernels.autotune.
+    static_precision` (the error-table gate).
     """
     K, L, J = soft_plan.d.shape
     K_local = K // n_shards
@@ -159,6 +182,8 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
     impl = "fused" if impl == "auto" else impl
     omode = _resolve_overlap(overlap, n_shards)
+    prec = autotune.static_precision(soft_plan.B, precision) \
+        if impl == "fused" and n_shards == 1 else "fp32"
     if n_shards > 1:    # tiles must divide the per-device cluster count
         tk = _shard_tk(_DEF_TK if tk is None else tk, K_local)
     elif tk is None:
@@ -171,34 +196,54 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
         return Schedule(impl, V, tk, tl, tj, source, 0, limit, n_shards,
                         overlap=omode)
 
-    def est(v):
+    def est(v, lc=None):
         return autotune.estimate_vmem_bytes(impl, L=L, J=J, C2=v * C * 2,
                                             tk=tk, tl=tl, tj=tj,
-                                            itemsize=itemsize)
+                                            itemsize=itemsize, lchunk=lc,
+                                            precision=prec)
 
     if V == "auto":
-        fits = [v for v in AUTO_V_CANDIDATES if est(v) <= limit]
-        if not fits:
+        fits = [v for v in AUTO_V_CANDIDATES if est(v, lchunk) <= limit]
+        if fits:
+            V = max(fits)
+            source = "static"
+        elif lchunk is None and impl == "fused" and n_shards == 1:
+            # the monolithic coefficient tile is over budget at every
+            # lane width: engage streaming, widest lane width first
+            for v in reversed(AUTO_V_CANDIDATES):
+                try:
+                    lchunk = autotune.static_lchunk(
+                        L=L, J=J, C2=v * C * 2, tk=tk, itemsize=itemsize,
+                        precision=prec, limit=limit)
+                except RuntimeError:
+                    continue
+                V, source = v, "static"
+                break
+            else:
+                raise ValueError(
+                    f"no schedule fits the {limit}-byte VMEM budget for "
+                    f"impl={impl} at B={soft_plan.B}, even streaming at "
+                    f"lchunk=1 (raise $REPRO_VMEM_BYTES or vmem_budget)")
+        else:
             raise ValueError(
                 f"no lane width fits the {limit}-byte VMEM budget for "
-                f"impl={impl} at B={soft_plan.B} (min estimate {est(1)}; "
-                f"raise $REPRO_VMEM_BYTES or vmem_budget)")
-        V = max(fits)
-        source = "static"
+                f"impl={impl} at B={soft_plan.B} (min estimate "
+                f"{est(1, lchunk)}; raise $REPRO_VMEM_BYTES or vmem_budget)")
     else:
         source = "explicit"
-        if est(V) > limit:
+        if est(V, lchunk) > limit:
             raise ValueError(
                 f"explicit schedule impl={impl} V={V} tk={tk} needs "
-                f"{est(V)} bytes of VMEM per grid step, over the {limit} "
-                f"budget (raise $REPRO_VMEM_BYTES or vmem_budget)")
-    return Schedule(impl, V, tk, tl, tj, source, est(V), limit, n_shards,
-                    overlap=omode)
+                f"{est(V, lchunk)} bytes of VMEM per grid step, over the "
+                f"{limit} budget (raise $REPRO_VMEM_BYTES or vmem_budget)")
+    return Schedule(impl, V, tk, tl, tj, source, est(V, lchunk), limit,
+                    n_shards, overlap=omode, lchunk=lchunk, precision=prec)
 
 
 def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
                        reps: int, cache, n_shards: int = 1, overlap=None,
-                       mesh=None, axis=None) -> Schedule:
+                       mesh=None, axis=None, lchunk=None,
+                       precision=None) -> Schedule:
     """Resolve via the measured autotune sweep (disk-cached winners).
 
     Mesh plans sweep the per-device cluster shard (autotune_dwt's
@@ -209,7 +254,12 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
     (:func:`repro.kernels.autotune.autotune_overlap`, each cached under
     its own /O{mode} key) and take the faster.
     """
-    if n_shards > 1:
+    prec = autotune.static_precision(soft_plan.B, precision) \
+        if n_shards == 1 and impl in ("auto", "fused") else "fp32"
+    streaming = lchunk is not None or prec == "bf16"
+    if streaming:       # only the fused family has a streaming kernel
+        impls = ("fused",)
+    elif n_shards > 1:
         impls = ("fused",) if impl == "auto" else (impl,)
     else:
         impls = AUTO_IMPL_CANDIDATES if impl == "auto" else (impl,)
@@ -218,7 +268,10 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
     for im in impls:
         cfg = autotune.autotune_dwt(soft_plan, im, Vs=Vs, reps=reps,
                                     interpret=interpret, vmem_limit=limit,
-                                    cache=cache, n_shards=n_shards)
+                                    cache=cache, n_shards=n_shards,
+                                    lchunk=lchunk,
+                                    precision=prec if im == "fused"
+                                    else "fp32")
         if best is None or cfg["per_transform_s"] < best["per_transform_s"]:
             best, best_impl = cfg, im
     if overlap is None and n_shards > 1 and mesh is not None:
@@ -231,12 +284,15 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
         omode = _resolve_overlap(overlap, n_shards)
     K, L, J = soft_plan.d.shape
     C = soft_plan.gather_m.shape[1]
+    prec = prec if best_impl == "fused" else "fp32"
     est = autotune.estimate_vmem_bytes(
         best_impl, L=L, J=J, C2=best["V"] * C * 2, tk=best["tk"],
         tl=best["tl"], tj=best["tj"],
-        itemsize=jnp.dtype(soft_plan.d.dtype).itemsize)
+        itemsize=jnp.dtype(soft_plan.d.dtype).itemsize,
+        lchunk=lchunk, precision=prec)
     return Schedule(best_impl, best["V"], best["tk"], best["tl"], best["tj"],
                     "measured", est, limit, n_shards, overlap=omode,
+                    lchunk=lchunk, precision=prec,
                     per_transform_s=best["per_transform_s"])
 
 
@@ -309,16 +365,35 @@ class Transform:
         ("off" | "pipelined"; always "off" without a mesh).  Mesh plans
         also report the shard axis names, the per-device shard counts
         (clusters and beta rows), and the resolved per-device lane
-        width."""
+        width.
+
+        Memory diagnostics for paper-scale B: ``lchunk`` / ``precision``
+        are the resolved streaming schedule (None / "fp32" = monolithic
+        bitwise path), ``est_live_coeff_bytes`` the peak VMEM-live
+        coefficient tile of one grid step (drops by ~L/lchunk when
+        streaming engages), and ``est_peak_hbm_bytes`` the estimated
+        whole-transform HBM residency (grid + stacks + Wigner working
+        set) -- read these BEFORE launching a large B to see which tier
+        would blow up."""
         s = self.schedule
+        K, L, J = self.soft_plan.d.shape
+        C = self.soft_plan.gather_m.shape[1]
+        itemsize = jnp.dtype(self.dtype).itemsize
         out = {
             "B": self.B, "dtype": jnp.dtype(self.dtype).name,
             "impl": s.impl, "V": s.V, "tk": s.tk, "tl": s.tl, "tj": s.tj,
             "tune": self.tune, "source": s.source, "overlap": s.overlap,
+            "lchunk": s.lchunk, "precision": s.precision,
             "vmem_bytes": s.vmem_bytes,
             "vmem_limit": s.vmem_limit, "n_shards": self.n_shards,
             "n_clusters": self.soft_plan.n_clusters,
             "n_padded": self.soft_plan.n_padded,
+            "est_live_coeff_bytes": autotune.estimate_live_coeff_bytes(
+                tk=s.tk, L=L, C2=s.V * C * 2, itemsize=itemsize,
+                lchunk=s.lchunk),
+            "est_peak_hbm_bytes": autotune.estimate_hbm_bytes(
+                s.impl, B=self.B, K=K, L=L, J=J, C2=s.V * C * 2,
+                itemsize=itemsize, lchunk=s.lchunk, precision=s.precision),
         }
         if self.mesh is not None:
             out.update({
@@ -364,6 +439,7 @@ class Transform:
             return None
         s = self.schedule
         return maker(self.soft_plan, impl, tk=s.tk, tl=s.tl, tj=s.tj,
+                     lchunk=s.lchunk, precision=s.precision,
                      interpret=self.interpret, batch=batch)
 
     def shard_meta(self):
@@ -567,6 +643,7 @@ def _mesh_key(mesh):
 
 def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
          tk: int | None = None, tl: int | None = None, tj: int | None = None,
+         lchunk: int | None = None, precision: str | None = None,
          mesh=None, axis=("data", "model"), tune: str | None = None,
          overlap: str | None = None, vmem_budget: int | None = None,
          interpret=None, n_buckets: int = 8,
@@ -575,6 +652,13 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
 
     impl: "auto" | "reference" | "dense" | "ragged" | "onthefly" | "fused".
     V:    "auto" or an explicit lane width for the batch executors.
+    lchunk: None (monolithic kernel, or auto-engaged streaming when the
+          monolithic tile cannot fit the VMEM budget at any lane width)
+          or an explicit l-chunk (divisor of B) forcing the streaming
+          fused schedule (single-shard fused plans only).
+    precision: None/"auto" (fp32 below B=128, bf16 storage at recorded
+          paper-scale bandwidths -- the error-table gate) or explicit
+          "fp32" | "bf16".
     tune: "static" (default; VMEM-guard estimator picks the widest lane
           packing that fits) or "measure" (kernels.autotune measured
           sweep, winners cached on disk).  $REPRO_PLAN_TUNE overrides
@@ -597,6 +681,21 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
                          f"got {impl!r}")
     if V != "auto" and (not isinstance(V, int) or V < 1):
         raise ValueError(f"V must be 'auto' or a positive int, got {V!r}")
+    if precision not in (None, "auto", *autotune.PRECISIONS):
+        raise ValueError(f"precision must be None, 'auto' or one of "
+                         f"{autotune.PRECISIONS}, got {precision!r}")
+    if lchunk is not None or precision == "bf16":
+        if impl not in ("auto", "fused"):
+            raise ValueError(
+                f"streaming schedules (lchunk/bf16) exist only for the "
+                f"fused family, not impl={impl!r}")
+        if mesh is not None:
+            raise ValueError(
+                "streaming schedules (lchunk/bf16) are not wired into "
+                "the sharded executor yet; plan without a mesh")
+        if lchunk is not None:
+            from repro.kernels import streaming
+            lchunk = streaming.check_lchunk(B, lchunk)
     if overlap is not None:
         parallel.check_overlap_mode(overlap)       # typos before mesh advice
         if overlap != "off" and mesh is None:
@@ -607,9 +706,9 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
     limit = autotune.vmem_limit_bytes() if vmem_budget is None \
         else int(vmem_budget)
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
-    key = (B, jnp.dtype(dtype).str, impl, V, tk, tl, tj, _mesh_key(mesh),
-           axis if mesh is not None else None, mode, overlap, limit,
-           interpret, n_buckets,
+    key = (B, jnp.dtype(dtype).str, impl, V, tk, tl, tj, lchunk, precision,
+           _mesh_key(mesh), axis if mesh is not None else None, mode,
+           overlap, limit, interpret, n_buckets,
            None if tune_cache is None else str(tune_cache))
     hit = _CACHE.get(key)
     if hit is not None:
@@ -656,10 +755,10 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
             and tk is None and tl is None and tj is None:
         schedule = _measured_schedule(soft_plan, impl, V, limit, interpret,
                                       tune_reps, tune_cache, n_shards,
-                                      overlap, mesh, axis)
+                                      overlap, mesh, axis, lchunk, precision)
     else:
         schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit,
-                                    n_shards, overlap)
+                                    n_shards, overlap, lchunk, precision)
 
     t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
                   axis=axis if mesh is not None else None,

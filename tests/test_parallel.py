@@ -271,7 +271,8 @@ def test_autotune_overlap_key_segment():
     limit = autotune.vmem_limit_bytes()
     k_off = autotune._key(plan, "fused", 2, limit, 2)
     k_pipe = autotune._key(plan, "fused", 2, limit, 2, overlap="pipelined")
-    assert k_off.endswith("/S2/Ooff") and k_pipe.endswith("/S2/Opipelined")
+    assert k_off.endswith("/S2/Ooff/L0/Pfp32")
+    assert k_pipe.endswith("/S2/Opipelined/L0/Pfp32")
     assert k_off != k_pipe and k_off.rsplit("/O", 1)[0] == \
         k_pipe.rsplit("/O", 1)[0]
     # static heuristic: mesh plans pipeline, single-shard plans don't

@@ -62,6 +62,24 @@ def test_plan_rejects_bad_config():
         plan_mod.plan(8, tune="sometimes")
 
 
+def test_plan_cache_keys_streaming_segments():
+    """/L{lchunk}/P{precision} are part of the autotune cache key, and
+    plans differing only in those knobs are distinct Transforms (the
+    streaming half of the identity contract; parity lives in
+    tests/test_streaming.py)."""
+    from repro.kernels import autotune
+    t = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    key = autotune._key(t.soft_plan, "fused", 2, 1 << 20,
+                        lchunk=2, precision="bf16")
+    assert key.endswith("/L2/Pbf16")
+    assert autotune._key(t.soft_plan, "fused", 2, 1 << 20) \
+        .endswith("/L0/Pfp32")
+    s = plan_mod.plan(8, impl="fused", V=2, tk=4, lchunk=2)
+    assert s is not t and s.schedule.lchunk == 2
+    assert {"lchunk", "precision", "est_live_coeff_bytes",
+            "est_peak_hbm_bytes"} <= t.describe().keys()
+
+
 # ---------------------------------------------------------------------------
 # roundtrip for every schedule the planner can select
 # ---------------------------------------------------------------------------

@@ -1,0 +1,189 @@
+"""Streaming l-chunked fused DWT schedules (kernels/streaming.py): bitwise
+parity with the monolithic kernel across chunk sizes, the bf16 storage
+precision against its error-table gate, the chunked window-table emission
+against the core numpy oracle and the dense fundamental table, the
+/L{lchunk}/P{precision} cache-key identity, and the planner's static
+auto-engagement under a tight VMEM budget."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import plan as plan_mod
+from repro.core import quadrature, soft, wigner
+from repro.kernels import autotune, ops, streaming
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: chunked == monolithic for every chunk size (fp32/f64)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [8, 16])
+@pytest.mark.parametrize("lchunk", [1, 2, "B"])
+def test_streaming_bitwise_equals_monolithic(B, lchunk):
+    lc = B if lchunk == "B" else lchunk
+    mono = plan_mod.plan(B, impl="fused", V=2, tk=4)
+    strm = plan_mod.plan(B, impl="fused", V=2, tk=4, lchunk=lc)
+    assert strm is not mono                    # distinct cache entries
+    assert strm.schedule.lchunk == lc
+    fhat = soft.random_coeffs(B, seed=B)
+    f_mono = np.asarray(mono.inverse(fhat))
+    np.testing.assert_array_equal(np.asarray(strm.inverse(fhat)), f_mono)
+    np.testing.assert_array_equal(np.asarray(strm.forward(f_mono)),
+                                  np.asarray(mono.forward(f_mono)))
+
+
+def test_streaming_bitwise_equals_monolithic_f32():
+    B = 16
+    mono = plan_mod.plan(B, dtype=jnp.float32, impl="fused", V=2, tk=4)
+    strm = plan_mod.plan(B, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                         lchunk=4)
+    fhat = soft.random_coeffs(B, seed=3).astype(np.complex64)
+    f_mono = np.asarray(mono.inverse(fhat))
+    np.testing.assert_array_equal(np.asarray(strm.inverse(fhat)), f_mono)
+    np.testing.assert_array_equal(np.asarray(strm.forward(f_mono)),
+                                  np.asarray(mono.forward(f_mono)))
+
+
+# ---------------------------------------------------------------------------
+# bf16 storage precision: bounded by (and distinct from) fp32
+# ---------------------------------------------------------------------------
+
+def test_bf16_within_error_table_gate():
+    B = 16
+    bound = autotune.PRECISION_ERROR_BOUNDS[B]
+    mono = plan_mod.plan(B, dtype=jnp.float32, impl="fused", V=2, tk=4)
+    bf = plan_mod.plan(B, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                       lchunk=4, precision="bf16")
+    assert bf.schedule.precision == "bf16"
+    fhat = soft.random_coeffs(B, seed=5).astype(np.complex64)
+    f32 = np.asarray(mono.inverse(fhat))
+    f16 = np.asarray(bf.inverse(fhat))
+    rel = np.abs(f16 - f32).max() / np.abs(f32).max()
+    assert 0 < rel <= bound                 # rounds, but inside the gate
+    b32 = np.asarray(mono.forward(f32))
+    b16 = np.asarray(bf.forward(f32))
+    rel = np.abs(b16 - b32).max() / np.abs(b32).max()
+    assert 0 < rel <= bound
+
+
+# ---------------------------------------------------------------------------
+# window tables: jnp builder == numpy core oracle == dense table boundaries
+# ---------------------------------------------------------------------------
+
+def test_build_windows_matches_core_oracle_and_dense_table():
+    B, lchunk = 16, 4
+    win, pairs = wigner.wigner_window_table(B, lchunk)
+    beta = quadrature.betas(B)
+    m, mp = pairs[:, 0], pairs[:, 1]
+    seeds = np.stack([wigner.wigner_seed(int(a), int(b), beta)
+                      for a, b in pairs])
+    jwin = np.asarray(streaming.build_windows(
+        jnp.asarray(seeds), jnp.asarray(m, jnp.float64)[:, None],
+        jnp.asarray(mp, jnp.float64)[:, None],
+        jnp.asarray(np.cos(beta))[None, :], L=B, lchunk=lchunk))
+    np.testing.assert_allclose(jwin, win, atol=1e-12)
+    assert not win[0].any()                  # chunk 0 carries no history
+    fund, _ = wigner.wigner_d_fundamental(B)
+    for c in range(1, B // lchunk):
+        l = c * lchunk
+        act = m < l       # pairs seeded at l sit inside the chunk: zeros
+        np.testing.assert_allclose(win[c, 1][act], fund[act, l, :],
+                                   atol=1e-12)
+        np.testing.assert_allclose(win[c, 0][act], fund[act, l - 1, :],
+                                   atol=1e-12)
+        assert not win[c][:, ~act].any()
+
+
+def test_window_table_rejects_bad_lchunk():
+    with pytest.raises(ValueError, match="divide"):
+        wigner.wigner_window_table(16, 3)
+    with pytest.raises(ValueError, match="outside"):
+        streaming.check_lchunk(16, 0)
+    with pytest.raises(ValueError, match="outside"):
+        streaming.check_lchunk(16, 17)
+    with pytest.raises(ValueError, match="divide"):
+        streaming.check_lchunk(16, 6)
+    assert streaming.check_lchunk(16, 4) == 4
+
+
+# ---------------------------------------------------------------------------
+# argument validation: streaming exists only for the fused family
+# ---------------------------------------------------------------------------
+
+def test_streaming_args_rejected_off_fused():
+    assert ops._check_streaming_args("fused", 2, None) is True
+    assert ops._check_streaming_args("fused", None, "bf16") is True
+    assert ops._check_streaming_args("dense", None, None) is False
+    with pytest.raises(ValueError, match="fused"):
+        ops._check_streaming_args("dense", 2, None)
+    with pytest.raises(ValueError, match="precision"):
+        ops._check_streaming_args("fused", None, "fp16")
+    with pytest.raises(ValueError, match="fused"):
+        plan_mod.plan(8, impl="reference", lchunk=2)
+    with pytest.raises(ValueError, match="precision"):
+        plan_mod.plan(8, impl="fused", precision="fp16")
+    with pytest.raises(ValueError, match="divide"):
+        plan_mod.plan(8, impl="fused", lchunk=3)
+
+
+# ---------------------------------------------------------------------------
+# cache-key identity: /L and /P segments key the streaming schedules
+# ---------------------------------------------------------------------------
+
+def test_cache_key_has_lchunk_and_precision_segments():
+    sp = plan_mod.plan(8, impl="fused", V=2, tk=4).soft_plan
+    base = autotune._key(sp, "fused", 2, 1 << 20)
+    assert "/L0/Pfp32" in base
+    chunked = autotune._key(sp, "fused", 2, 1 << 20, lchunk=4)
+    assert "/L4/Pfp32" in chunked and chunked != base
+    bf = autotune._key(sp, "fused", 2, 1 << 20, lchunk=4, precision="bf16")
+    assert "/L4/Pbf16" in bf and bf != chunked
+
+
+def test_plan_cache_distinct_per_lchunk_and_precision():
+    a = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    b = plan_mod.plan(8, impl="fused", V=2, tk=4, lchunk=2)
+    c = plan_mod.plan(8, impl="fused", V=2, tk=4, lchunk=2,
+                      precision="fp32")
+    d = plan_mod.plan(8, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                      lchunk=2, precision="bf16")
+    assert a is not b and b is not d
+    assert b is plan_mod.plan(8, impl="fused", V=2, tk=4, lchunk=2)
+    assert c.schedule.lchunk == 2 and c.schedule.precision == "fp32"
+
+
+# ---------------------------------------------------------------------------
+# describe(): memory estimates surface, and chunking shrinks the live tile
+# ---------------------------------------------------------------------------
+
+def test_describe_reports_streaming_fields_and_live_memory_drop():
+    mono = plan_mod.plan(16, impl="fused", V=2, tk=4).describe()
+    strm = plan_mod.plan(16, impl="fused", V=2, tk=4, lchunk=2).describe()
+    for d in (mono, strm):
+        for key in ("lchunk", "precision", "est_live_coeff_bytes",
+                    "est_peak_hbm_bytes"):
+            assert key in d
+    assert mono["lchunk"] is None and strm["lchunk"] == 2
+    assert strm["est_live_coeff_bytes"] < mono["est_live_coeff_bytes"]
+    assert strm["est_live_coeff_bytes"] == \
+        mono["est_live_coeff_bytes"] * 2 // 16
+    # the chunk-boundary window table is HBM the monolithic recurrence
+    # never stores; coarser chunks mean fewer boundaries, hence less HBM.
+    coarse = plan_mod.plan(16, impl="fused", V=2, tk=4,
+                           lchunk=8).describe()
+    assert strm["est_peak_hbm_bytes"] > mono["est_peak_hbm_bytes"]
+    assert coarse["est_peak_hbm_bytes"] < strm["est_peak_hbm_bytes"]
+
+
+def test_static_schedule_auto_engages_streaming_under_tight_budget():
+    # monolithic V=1 at B=16/f32 needs ~27.8 KB VMEM: a 25 KB budget
+    # forces the planner onto the chunked schedule instead of failing.
+    t = plan_mod.plan(16, dtype=jnp.float32, impl="fused",
+                      vmem_budget=25_000)
+    assert t.schedule.lchunk is not None
+    assert t.schedule.vmem_bytes <= 25_000
+    fhat = soft.random_coeffs(16, seed=7).astype(np.complex64)
+    ref = plan_mod.plan(16, dtype=jnp.float32, impl="fused", V=t.V,
+                        tk=t.schedule.tk)
+    np.testing.assert_array_equal(np.asarray(t.inverse(fhat)),
+                                  np.asarray(ref.inverse(fhat)))
