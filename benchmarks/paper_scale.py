@@ -87,10 +87,15 @@ def run(max_B=64, fast=False, reps=None):
             continue
         n_reps = reps if reps is not None else (1 if B >= 64 else 2)
         lchunk = max(1, B // LCHUNK_FRACTION)
+        # precision is pinned explicitly on every row: the bitwise check
+        # below REQUIRES fused and fused_stream to run the same fp32
+        # math (only the bf16 row may round), independent of whatever
+        # the planner's precision heuristic would pick at this B.
         schedules = [
-            ("reference", dict(impl="reference", V=2)),
-            ("fused", dict(impl="fused", V=2)),
-            ("fused_stream", dict(impl="fused", V=2, lchunk=lchunk)),
+            ("reference", dict(impl="reference", V=2, precision="fp32")),
+            ("fused", dict(impl="fused", V=2, precision="fp32")),
+            ("fused_stream", dict(impl="fused", V=2, lchunk=lchunk,
+                                  precision="fp32")),
             ("fused_stream_bf16", dict(impl="fused", V=2, lchunk=lchunk,
                                        precision="bf16")),
         ]

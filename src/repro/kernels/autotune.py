@@ -152,27 +152,41 @@ def estimate_hbm_bytes(impl: str, *, B: int, K: int, L: int, J: int,
     return grid + stacks + tables
 
 
-def static_precision(B: int, precision: str | None = None) -> str:
-    """Resolve a schedule precision: an explicit choice is validated and
-    honored; "auto"/None picks bf16 storage only at paper-scale
-    bandwidths (B >= 128) whose error bound is recorded in
-    :data:`PRECISION_ERROR_BOUNDS` -- the error-table gate -- and fp32
-    (i.e. the plan dtype, bitwise-safe) everywhere else."""
+def static_precision(B: int, precision: str | None = None,
+                     dtype=None) -> str:
+    """Resolve a schedule precision.  An explicit "fp32"/"bf16" choice is
+    validated and honored.  None -- the planner default -- ALWAYS resolves
+    to "fp32" (the plan dtype, bitwise-safe): a default plan never trades
+    accuracy behind the caller's back.  Only an explicit ``"auto"`` opts
+    into the heuristic: bf16 storage at paper-scale bandwidths (B >= 128)
+    whose error bound is recorded in :data:`PRECISION_ERROR_BOUNDS` --
+    the error-table gate -- and only for float32 plans (``dtype``); an
+    f64 plan asked for accuracy bf16 storage cannot deliver, so "auto"
+    never downgrades it."""
     if precision not in (None, "auto", *PRECISIONS):
         raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
     if precision in PRECISIONS:
         return precision
-    return "bf16" if B >= 128 and B in PRECISION_ERROR_BOUNDS else "fp32"
+    if precision is None:
+        return "fp32"
+    fp32_plan = dtype is None or jnp.dtype(dtype) == jnp.float32
+    return "bf16" if (fp32_plan and B >= 128
+                      and B in PRECISION_ERROR_BOUNDS) else "fp32"
 
 
 def static_lchunk(*, L: int, J: int, C2: int, tk: int, itemsize: int = 4,
-                  precision: str = "fp32",
-                  limit: int | None = None) -> int | None:
+                  precision: str = "fp32", limit: int | None = None,
+                  monolithic_ok: bool = True) -> int | None:
     """Static l-chunk heuristic for the fused family: stay monolithic
     (None) when the full (TK, L, C2) coefficient tile fits the VMEM
     ceiling, otherwise the LARGEST divisor lchunk of L that fits (largest
     chunk = fewest window reloads + longest in-kernel recurrence runs).
-    Raises when not even lchunk = 1 fits (shrink tk or V instead)."""
+    Raises when not even lchunk = 1 fits (shrink tk or V instead).
+
+    ``monolithic_ok=False`` skips the monolithic fast-path and admits
+    lchunk = L as a candidate: bf16 schedules have no monolithic kernel
+    (make_dwt_fn forces the streaming family), so their resolution must
+    return a concrete chunk."""
     limit = vmem_limit_bytes() if limit is None else limit
 
     def est(lc):
@@ -180,9 +194,10 @@ def static_lchunk(*, L: int, J: int, C2: int, tk: int, itemsize: int = 4,
                                    itemsize=itemsize, lchunk=lc,
                                    precision=precision)
 
-    if est(None) <= limit:
+    if monolithic_ok and est(None) <= limit:
         return None
-    for lc in sorted((d for d in range(1, L) if L % d == 0), reverse=True):
+    top = L + 1 if not monolithic_ok else L
+    for lc in sorted((d for d in range(1, top) if L % d == 0), reverse=True):
         if est(lc) <= limit:
             return lc
     raise RuntimeError(

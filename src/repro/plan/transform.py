@@ -174,7 +174,12 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     static_lchunk`) -- so existing small-B plans keep their schedules
     bit-for-bit while paper-scale B stops failing the guard.  The
     storage precision resolves through :func:`repro.kernels.autotune.
-    static_precision` (the error-table gate).
+    static_precision` (plan-dtype-aware; only an explicit
+    ``precision="auto"`` opts into the error-table bf16 heuristic).
+    A bf16 schedule has no monolithic kernel (make_dwt_fn forces the
+    streaming family), so its lchunk is always resolved to a concrete
+    chunk here -- ``Schedule.lchunk``/``vmem_bytes`` describe the kernel
+    actually launched, never the monolithic one.
     """
     K, L, J = soft_plan.d.shape
     K_local = K // n_shards
@@ -182,8 +187,10 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
     impl = "fused" if impl == "auto" else impl
     omode = _resolve_overlap(overlap, n_shards)
-    prec = autotune.static_precision(soft_plan.B, precision) \
+    prec = autotune.static_precision(soft_plan.B, precision,
+                                     dtype=soft_plan.d.dtype) \
         if impl == "fused" and n_shards == 1 else "fp32"
+    mono_ok = prec == "fp32"    # bf16 has no monolithic kernel
     if n_shards > 1:    # tiles must divide the per-device cluster count
         tk = _shard_tk(_DEF_TK if tk is None else tk, K_local)
     elif tk is None:
@@ -203,18 +210,21 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
                                             precision=prec)
 
     if V == "auto":
-        fits = [v for v in AUTO_V_CANDIDATES if est(v, lchunk) <= limit]
+        fits = [v for v in AUTO_V_CANDIDATES if est(v, lchunk) <= limit] \
+            if (mono_ok or lchunk is not None) else []
         if fits:
             V = max(fits)
             source = "static"
         elif lchunk is None and impl == "fused" and n_shards == 1:
             # the monolithic coefficient tile is over budget at every
-            # lane width: engage streaming, widest lane width first
+            # lane width (or bf16 forces the streaming family outright):
+            # engage streaming, widest lane width first, each with its
+            # largest fitting chunk
             for v in reversed(AUTO_V_CANDIDATES):
                 try:
                     lchunk = autotune.static_lchunk(
                         L=L, J=J, C2=v * C * 2, tk=tk, itemsize=itemsize,
-                        precision=prec, limit=limit)
+                        precision=prec, limit=limit, monolithic_ok=mono_ok)
                 except RuntimeError:
                     continue
                 V, source = v, "static"
@@ -231,6 +241,12 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
                 f"{est(1, lchunk)}; raise $REPRO_VMEM_BYTES or vmem_budget)")
     else:
         source = "explicit"
+        if not mono_ok and lchunk is None:
+            # explicit bf16 V: resolve the chunk make_dwt_fn will run
+            # (largest that fits) so the schedule records it
+            lchunk = autotune.static_lchunk(
+                L=L, J=J, C2=V * C * 2, tk=tk, itemsize=itemsize,
+                precision=prec, limit=limit, monolithic_ok=False)
         if est(V, lchunk) > limit:
             raise ValueError(
                 f"explicit schedule impl={impl} V={V} tk={tk} needs "
@@ -254,8 +270,14 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
     (:func:`repro.kernels.autotune.autotune_overlap`, each cached under
     its own /O{mode} key) and take the faster.
     """
-    prec = autotune.static_precision(soft_plan.B, precision) \
+    prec = autotune.static_precision(soft_plan.B, precision,
+                                     dtype=soft_plan.d.dtype) \
         if n_shards == 1 and impl in ("auto", "fused") else "fp32"
+    if prec == "bf16" and lchunk is None:
+        # bf16 has no monolithic kernel: make_dwt_fn forces the streaming
+        # family at lchunk=B, so sweep/key/estimate the kernel that will
+        # actually launch instead of mislabeling it monolithic
+        lchunk = soft_plan.B
     streaming = lchunk is not None or prec == "bf16"
     if streaming:       # only the fused family has a streaming kernel
         impls = ("fused",)
@@ -656,9 +678,13 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
           monolithic tile cannot fit the VMEM budget at any lane width)
           or an explicit l-chunk (divisor of B) forcing the streaming
           fused schedule (single-shard fused plans only).
-    precision: None/"auto" (fp32 below B=128, bf16 storage at recorded
-          paper-scale bandwidths -- the error-table gate) or explicit
-          "fp32" | "bf16".
+    precision: None (the default: fp32 / plan-dtype storage, bitwise-
+          safe -- a default plan never trades accuracy implicitly),
+          "auto" (opt-in heuristic: bf16 storage for FLOAT32 plans at
+          paper-scale bandwidths with a recorded error-table bound;
+          f64 plans are never downgraded), or explicit "fp32" | "bf16".
+          bf16 always runs the streaming kernel, so its schedule
+          resolves a concrete lchunk even when lchunk=None.
     tune: "static" (default; VMEM-guard estimator picks the widest lane
           packing that fits) or "measure" (kernels.autotune measured
           sweep, winners cached on disk).  $REPRO_PLAN_TUNE overrides

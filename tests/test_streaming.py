@@ -67,6 +67,61 @@ def test_bf16_within_error_table_gate():
 
 
 # ---------------------------------------------------------------------------
+# precision resolution: None never downgrades; "auto" is opt-in + dtype-gated
+# ---------------------------------------------------------------------------
+
+def test_static_precision_default_never_downgrades():
+    # None (the planner default) is fp32 at EVERY bandwidth, including
+    # paper-scale ones with a recorded bf16 bound: a default plan(B)
+    # must never silently trade accuracy
+    for B in (16, 128, 512):
+        assert autotune.static_precision(B) == "fp32"
+    # explicit choices are honored verbatim
+    assert autotune.static_precision(8, "bf16") == "bf16"
+    assert autotune.static_precision(512, "fp32") == "fp32"
+    with pytest.raises(ValueError, match="precision"):
+        autotune.static_precision(8, "fp16")
+
+
+def test_static_precision_auto_gates_on_dtype_and_bound():
+    # "auto" engages bf16 only for fp32 plans at gated paper-scale B
+    assert autotune.static_precision(128, "auto",
+                                     dtype=jnp.float32) == "bf16"
+    assert autotune.static_precision(64, "auto",
+                                     dtype=jnp.float32) == "fp32"
+    # an f64 plan is NEVER implicitly downgraded, at any bandwidth
+    assert autotune.static_precision(128, "auto",
+                                     dtype=jnp.float64) == "fp32"
+    assert autotune.static_precision(512, "auto",
+                                     dtype=jnp.float64) == "fp32"
+    # below the threshold "auto" keeps the bitwise path on a real plan
+    t = plan_mod.plan(16, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                      precision="auto")
+    assert t.schedule.precision == "fp32" and t.schedule.lchunk is None
+
+
+def test_bf16_schedule_records_the_streaming_kernel():
+    # bf16 with lchunk=None forces the streaming kernel: the resolved
+    # schedule must record a concrete chunk, and its VMEM estimate must
+    # model the streaming footprint, not the monolithic one
+    t = plan_mod.plan(16, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                      precision="bf16")
+    s = t.schedule
+    assert s.precision == "bf16" and s.lchunk is not None
+    K, L, J = t.soft_plan.d.shape
+    C = t.soft_plan.gather_m.shape[1]
+    assert s.vmem_bytes == autotune.estimate_vmem_bytes(
+        "fused", L=L, J=J, C2=s.V * C * 2, tk=s.tk, itemsize=4,
+        lchunk=s.lchunk, precision="bf16")
+    # and the plan matches its explicitly-chunked twin bit for bit
+    tw = plan_mod.plan(16, dtype=jnp.float32, impl="fused", V=2, tk=4,
+                       lchunk=s.lchunk, precision="bf16")
+    fhat = soft.random_coeffs(16, seed=9).astype(np.complex64)
+    np.testing.assert_array_equal(np.asarray(t.inverse(fhat)),
+                                  np.asarray(tw.inverse(fhat)))
+
+
+# ---------------------------------------------------------------------------
 # window tables: jnp builder == numpy core oracle == dense table boundaries
 # ---------------------------------------------------------------------------
 
