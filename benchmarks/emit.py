@@ -56,6 +56,25 @@ def emit_root_json(section: str, rows: list, out=None) -> pathlib.Path:
     return path
 
 
+def append_root_json(section: str, rows: list, out=None) -> pathlib.Path:
+    """Append tagged rows to an existing BENCH_<section>.json (create it
+    if absent) and return the path.  This is the cross-PR perf-history
+    write: the committed file accumulates sha-tagged rows from many
+    commits, so CI appends instead of overwriting."""
+    path = REPO_ROOT / f"BENCH_{section}.json" if out is None \
+        else pathlib.Path(out)
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError):
+        doc = {"section": section, "sha": git_sha(),
+               "schema_version": SCHEMA_VERSION, "rows": []}
+    doc["sha"] = git_sha()              # last writer; rows keep their own
+    doc["schema_version"] = SCHEMA_VERSION
+    doc.setdefault("rows", []).extend(tag_rows(section, rows))
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
 def check_schema(rows: list, baseline_path) -> list[str]:
     """Schema-loss guard: every field that appears in the committed
     baseline's rows must appear in some fresh row.  Returns a list of

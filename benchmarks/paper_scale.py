@@ -166,7 +166,11 @@ def run(max_B=64, fast=False, reps=None):
     return rows, failures
 
 
-def main(fast=False, max_B=64, out=None, check_against=None, reps=None):
+def main(fast=False, max_B=64, out=None, check_against=None, reps=None,
+         append=False):
+    """append=True extends the committed BENCH_paper_scale.json history
+    (the cross-PR perf feed CI maintains) instead of overwriting it; the
+    schema-loss guard runs against the pre-append baseline either way."""
     from benchmarks import emit
 
     rows, failures = run(max_B=max_B, fast=fast, reps=reps)
@@ -178,9 +182,16 @@ def main(fast=False, max_B=64, out=None, check_against=None, reps=None):
               f"{r['speedup_vs_reference']:.2f},{r['efficiency']:.2f},"
               f"{r['lchunk']},{r['precision']},{r['est_live_coeff_bytes']}")
     if check_against:
+        # guard BEFORE writing: an append must never launder a schema loss
+        # into the baseline it is then checked against
         failures += emit.check_schema(rows, check_against)
-    path = emit.emit_root_json("paper_scale", rows, out=out)
-    print(f"wrote {path} ({len(rows)} rows, sha {emit.git_sha()})")
+    if append:
+        path = emit.append_root_json("paper_scale", rows, out=out)
+        verb = "appended to"
+    else:
+        path = emit.emit_root_json("paper_scale", rows, out=out)
+        verb = "wrote"
+    print(f"{verb} {path} ({len(rows)} rows, sha {emit.git_sha()})")
     if failures:
         for f in failures:
             print("FAIL:", f)
@@ -199,6 +210,10 @@ if __name__ == "__main__":
                          "the repo root)")
     ap.add_argument("--check-against", default=None,
                     help="committed baseline JSON for the schema-loss guard")
+    ap.add_argument("--append", action="store_true",
+                    help="append rows to the existing artifact (perf "
+                         "history) instead of overwriting it")
     args = ap.parse_args()
     main(fast=args.fast, max_B=args.max_B, out=args.out,
-         check_against=args.check_against, reps=args.reps)
+         check_against=args.check_against, reps=args.reps,
+         append=args.append)

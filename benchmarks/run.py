@@ -19,7 +19,13 @@ Sections:
 
 With --emit-root-json, every section whose main() returns dict rows also
 writes a BENCH_<section>.json artifact at the repo root in the shared
-benchmarks.emit schema (rows tagged with git SHA + section).
+benchmarks.emit schema (rows tagged with git SHA + section); paper_scale
+then APPENDS to its committed artifact (the cross-PR perf history) with
+the schema-loss guard run against the pre-append baseline.
+
+With --trace PATH, the run's repro.obs spans (plan builds, autotune
+sweeps, executor chunks, service requests) are dumped as a Chrome-trace
+JSON -- load it at chrome://tracing or ui.perfetto.dev.
 """
 from __future__ import annotations
 
@@ -93,6 +99,9 @@ def main() -> None:
     ap.add_argument("--emit-root-json", action="store_true",
                     help="write BENCH_<section>.json at the repo root for "
                          "sections that return rows (shared emit schema)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump the run's repro.obs spans as a Chrome-trace "
+                         "JSON at PATH")
     args = ap.parse_args()
 
     import jax
@@ -135,7 +144,15 @@ def main() -> None:
             rows = roofline.main(args.artifacts)
         elif name == "paper_scale":
             from benchmarks import paper_scale
-            rows = paper_scale.main(fast=args.fast)
+            if args.emit_root_json:
+                # CI perf-history feed: append sha-tagged rows to the
+                # committed artifact, schema-guarded against it
+                from benchmarks import emit
+                baseline = emit.REPO_ROOT / "BENCH_paper_scale.json"
+                rows = paper_scale.main(fast=args.fast, append=True,
+                                        check_against=baseline)
+            else:
+                rows = paper_scale.main(fast=args.fast)
         if args.emit_root_json and name != "paper_scale":
             # paper_scale emits its own artifact (plus structural checks)
             from benchmarks import emit
@@ -145,6 +162,11 @@ def main() -> None:
             else:
                 print(f"-> no dict rows from {name}; nothing emitted")
         print(f"[{name}: {time.time() - t0:.1f}s]")
+    if args.trace:
+        from repro import obs
+        path = obs.get_recorder().dump_chrome_trace(args.trace)
+        print(f"\nchrome trace -> {path} "
+              f"({len(obs.get_recorder().events())} events)")
     print(f"\ntotal {time.time() - t_all:.1f}s")
 
 

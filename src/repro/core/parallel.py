@@ -77,6 +77,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
+
 from .compat import shard_map, shard_map_norep
 
 from .batched import SoftPlan, fft_analysis, fft_synthesis
@@ -384,40 +386,48 @@ class DistExecutor:
         axis, n, ld = self.axis, self.n_shards, self._ld
         C = self.plan.gather_m.shape[1]
 
+        # jax.named_scope labels are trace-time metadata only (no runtime
+        # cost, no numeric change): they make the all-to-all vs local-
+        # kernel split visible on device timelines (XLA profiles), lining
+        # up with the host-side obs spans around each dispatch.
         def stage1(f_loc):
             # f_loc: (V, 2B, jloc, 2B) lane stack of beta shards;
             # sign/gm/gmp replicated (pre-reshard, full K), w beta-local
-            S = jax.vmap(fft_analysis)(f_loc)         # (V, 2B, jloc, 2B)
+            with jax.named_scope("obs.fft_gather"):
+                S = jax.vmap(fft_analysis)(f_loc)     # (V, 2B, jloc, 2B)
 
-            def gather(s):
-                Sm = s[gm, :, gmp]                    # (K, C, jloc)
-                r = Sm * (sign[..., None] * w[None, None, :])
-                r = jnp.stack([r.real, r.imag], -1)   # (K, C, jloc, 2)
-                return jnp.swapaxes(r, 1, 2)          # (K, jloc, C, 2)
+                def gather(s):
+                    Sm = s[gm, :, gmp]                # (K, C, jloc)
+                    r = Sm * (sign[..., None] * w[None, None, :])
+                    r = jnp.stack([r.real, r.imag], -1)  # (K, C, jloc, 2)
+                    return jnp.swapaxes(r, 1, 2)      # (K, jloc, C, 2)
 
-            rhs = jax.vmap(gather)(S)                 # (V, K, jloc, C, 2)
-            V, K, jloc = rhs.shape[:3]
-            rhs = jnp.moveaxis(rhs, 0, 2)             # (K, jloc, V, C, 2)
-            return rhs.reshape(K, jloc, V * C * 2)
+                rhs = jax.vmap(gather)(S)             # (V, K, jloc, C, 2)
+                V, K, jloc = rhs.shape[:3]
+                rhs = jnp.moveaxis(rhs, 0, 2)         # (K, jloc, V, C, 2)
+                return rhs.reshape(K, jloc, V * C * 2)
 
         def reshard(rhs):
             # ONE all-to-all reshards all V lanes together:
             # (K, jloc, VC2) beta-sharded -> (K/n, jloc*n, VC2)
-            return jax.lax.all_to_all(rhs, axis, split_axis=0,
-                                      concat_axis=1, tiled=True)
+            with jax.named_scope("obs.all_to_all"):
+                return jax.lax.all_to_all(rhs, axis, split_axis=0,
+                                          concat_axis=1, tiled=True)
 
         def stage2(rhs):
             # refl/scale applied post-reshard on the cluster shard
-            Kn, jn = rhs.shape[0], rhs.shape[1]
-            V = rhs.shape[2] // (C * 2)
-            rhs = rhs.reshape(Kn, jn, V, C, 2)
-            rhs = jnp.where(refl[:, None, None, :, None], rhs[:, ::-1], rhs)
-            out = ld.fn(*dwt_ops, rhs.reshape(Kn, jn, V * C * 2))
-            out = out.reshape(*out.shape[:2], V, C, 2)
-            outc = out[..., 0] + 1j * out[..., 1]     # (Kloc, L, V, C)
-            outc = outc * (_refl_sign(refl, parity)[:, :, None, :]
-                           * scale[None, :, None, None])
-            return jnp.moveaxis(outc, 2, 0)           # (V, Kloc, L, C)
+            with jax.named_scope("obs.local_kernel"):
+                Kn, jn = rhs.shape[0], rhs.shape[1]
+                V = rhs.shape[2] // (C * 2)
+                rhs = rhs.reshape(Kn, jn, V, C, 2)
+                rhs = jnp.where(refl[:, None, None, :, None],
+                                rhs[:, ::-1], rhs)
+                out = ld.fn(*dwt_ops, rhs.reshape(Kn, jn, V * C * 2))
+                out = out.reshape(*out.shape[:2], V, C, 2)
+                outc = out[..., 0] + 1j * out[..., 1]  # (Kloc, L, V, C)
+                outc = outc * (_refl_sign(refl, parity)[:, :, None, :]
+                               * scale[None, :, None, None])
+                return jnp.moveaxis(outc, 2, 0)       # (V, Kloc, L, C)
 
         return stage1, reshard, stage2
 
@@ -430,40 +440,44 @@ class DistExecutor:
         def stage1(packed_loc):
             # packed_loc: (V, Kloc, L, C) lane stack of cluster shards;
             # sign_sh cluster-sharded (scales the local lhs)
-            lhs = packed_loc * (_refl_sign(refl, parity)[None]
-                                * sign_sh[None, :, None, :])
-            lhs = jnp.stack([lhs.real, lhs.imag], -1)  # (V, Kloc, L, C, 2)
-            V, Kloc, L = lhs.shape[:3]
-            lhs = jnp.moveaxis(lhs, 0, 2)              # (Kloc, L, V, C, 2)
-            g = ld.fn(*idwt_ops, lhs.reshape(Kloc, L, V * C * 2))
-            J = g.shape[1]
-            g = g.reshape(Kloc, J, V, C, 2)
-            g = jnp.where(refl[:, None, None, :, None], g[:, ::-1], g)
-            return g.reshape(Kloc, J, V * C * 2)
+            with jax.named_scope("obs.local_kernel"):
+                lhs = packed_loc * (_refl_sign(refl, parity)[None]
+                                    * sign_sh[None, :, None, :])
+                lhs = jnp.stack([lhs.real, lhs.imag], -1)  # (V,Kloc,L,C,2)
+                V, Kloc, L = lhs.shape[:3]
+                lhs = jnp.moveaxis(lhs, 0, 2)          # (Kloc, L, V, C, 2)
+                g = ld.fn(*idwt_ops, lhs.reshape(Kloc, L, V * C * 2))
+                J = g.shape[1]
+                g = g.reshape(Kloc, J, V, C, 2)
+                g = jnp.where(refl[:, None, None, :, None], g[:, ::-1], g)
+                return g.reshape(Kloc, J, V * C * 2)
 
         def reshard(g):
             # ONE all-to-all reshards all V lanes together:
             # (Kloc, J, VC2) cluster-sharded -> (K, jloc, VC2)
-            return jax.lax.all_to_all(g, axis, split_axis=1,
-                                      concat_axis=0, tiled=True)
+            with jax.named_scope("obs.all_to_all"):
+                return jax.lax.all_to_all(g, axis, split_axis=1,
+                                          concat_axis=0, tiled=True)
 
         def stage2(g):
             # sign replicated: masks the global bin scatter post-reshard
-            K, jloc = g.shape[0], g.shape[1]
-            V = g.shape[2] // (C * 2)
-            g = g.reshape(K, jloc, V, C, 2)
-            gc = g[..., 0] + 1j * g[..., 1]            # (K, jloc, V, C)
-            # scatter member columns into FFT bins (unused -> trash bin 2B)
-            gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
-            gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
+            with jax.named_scope("obs.scatter_fft"):
+                K, jloc = g.shape[0], g.shape[1]
+                V = g.shape[2] // (C * 2)
+                g = g.reshape(K, jloc, V, C, 2)
+                gc = g[..., 0] + 1j * g[..., 1]        # (K, jloc, V, C)
+                # scatter member columns into FFT bins (unused -> bin 2B)
+                gmask = jnp.where(sign != 0, gm, 2 * B).reshape(-1)
+                gmpask = jnp.where(sign != 0, gmp, 2 * B).reshape(-1)
 
-            def scatter(gl):                           # (K, jloc, C)
-                buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1), dtype=gl.dtype)
-                vals = jnp.swapaxes(gl, 1, 2).reshape(-1, jloc)
-                buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
-                return fft_synthesis(buf[: 2 * B, :, : 2 * B])
+                def scatter(gl):                       # (K, jloc, C)
+                    buf = jnp.zeros((2 * B + 1, jloc, 2 * B + 1),
+                                    dtype=gl.dtype)
+                    vals = jnp.swapaxes(gl, 1, 2).reshape(-1, jloc)
+                    buf = buf.at[gmask, :, gmpask].set(vals, mode="drop")
+                    return fft_synthesis(buf[: 2 * B, :, : 2 * B])
 
-            return jax.vmap(scatter, in_axes=2)(gc)    # (V, 2B, jloc, 2B)
+                return jax.vmap(scatter, in_axes=2)(gc)  # (V,2B,jloc,2B)
 
         return stage1, reshard, stage2
 
@@ -677,10 +691,19 @@ class DistExecutor:
         if mode == "pipelined":
             return self._batch_pipelined(xs, fwd, stats)
         V = self.lane_width
+        direction = "forward" if fwd else "inverse"
         outs = []
         for n0 in range(0, xs.shape[0], V):
             chunk, n = kops.pad_lanes(xs[n0: n0 + V], V)
-            out = lanes_fn(chunk)
+            # host-side dispatch span per chunk (the all-to-all + local
+            # kernel run inside the jitted shard_map; their device-side
+            # split is labeled by named_scopes -- see _forward_stages).
+            # obs.device_annotation additionally aligns this span with a
+            # jax.profiler device capture when $REPRO_OBS_JAX_TRACE is on.
+            with obs.span("executor.chunk", mode="off", direction=direction,
+                          chunk=n0 // V, lanes=n, n_shards=self.n_shards), \
+                    obs.device_annotation(f"executor.chunk.{direction}"):
+                out = lanes_fn(chunk)
             if stats is not None:
                 stats["launches"] += 1
                 stats["transforms"] += n
@@ -702,14 +725,24 @@ class DistExecutor:
                 [xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)])
         xs = xs.reshape((n_chunks, V) + xs.shape[1:])
         p = self.plan
-        if fwd:
-            out = self._forward_pipe_call()(
-                p.reflected, p.sign, p.gather_m, p.gather_mp, p.w, p.scale,
-                p.parity, xs, *self._ld.operands)
-        else:
-            out = self._inverse_pipe_call()(
-                p.reflected, p.sign, p.sign, p.gather_m, p.gather_mp,
-                p.parity, xs, *self._lid.operands)
+        direction = "forward" if fwd else "inverse"
+        # ONE span for the whole fori_loop pipeline (the chunks execute
+        # inside a single jitted call, so per-chunk host spans would be
+        # fiction); the two-slot rotation is recorded as the slot ids of
+        # pipeline_slots so the trace documents the schedule that ran
+        with obs.span("executor.pipeline", direction=direction,
+                      n_chunks=n_chunks, lanes=n, padded=pad,
+                      n_shards=self.n_shards,
+                      slots=[list(s) for s in pipeline_slots(n_chunks)]), \
+                obs.device_annotation(f"executor.pipeline.{direction}"):
+            if fwd:
+                out = self._forward_pipe_call()(
+                    p.reflected, p.sign, p.gather_m, p.gather_mp, p.w,
+                    p.scale, p.parity, xs, *self._ld.operands)
+            else:
+                out = self._inverse_pipe_call()(
+                    p.reflected, p.sign, p.sign, p.gather_m, p.gather_mp,
+                    p.parity, xs, *self._lid.operands)
         if stats is not None:
             stats["launches"] += n_chunks
             stats["transforms"] += n

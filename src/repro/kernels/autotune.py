@@ -30,11 +30,12 @@ from __future__ import annotations
 import json
 import os
 import pathlib
-import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from . import ops
 
@@ -256,12 +257,10 @@ def candidate_tiles(K: int, L: int, J: int, impl: str) -> list[dict]:
 
 
 def _time_fn(fn, *args, reps: int = 3) -> float:
-    jax.block_until_ready(fn(*args))          # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        r = fn(*args)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / reps
+    """Deprecated private alias of :func:`repro.obs.time_fn` (kept for
+    pre-obs callers); new code should call obs.time_fn directly so the
+    measurement lands in the shared Recorder with a useful name."""
+    return obs.time_fn(fn, *args, reps=reps, name="autotune.time_fn")
 
 
 def _key(plan, impl: str, V, limit: int, n_shards: int = 1,
@@ -350,7 +349,9 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
     key = _key(plan, impl, tuple(Vs) if len(Vs) > 1 else Vs[0], limit,
                n_shards, lchunk=lchunk, precision=precision)
     if not refresh and key in store:
+        obs.inc("autotune.cache.hit")
         return store[key]
+    obs.inc("autotune.cache.miss")
 
     K, L, J = plan.d.shape
     K_eff = K // n_shards       # the per-device cluster problem
@@ -359,35 +360,42 @@ def autotune_dwt(plan, impl: str = "fused", *, Vs=(1,), reps: int = 3,
     rng = np.random.default_rng(0)
     best = None
     n_skipped = 0
-    for V in Vs:
-        if n_shards > 1:
-            rhs = jnp.asarray(rng.normal(size=(K_eff, J, V * C * 2)),
-                              plan.d.dtype)
-        else:
-            shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
-            rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
-        for tile in candidate_tiles(K_eff, L, J, impl):
-            if estimate_vmem_bytes(impl, L=L, J=J, C2=V * C * 2,
-                                   itemsize=itemsize, lchunk=lchunk,
-                                   precision=precision,
-                                   **tile) > limit:
-                n_skipped += 1
-                continue
-            try:
-                if n_shards > 1:
-                    run = _local_shard_timer(plan, tile["tk"], n_shards,
-                                             interpret)
-                else:
-                    fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
-                                         batch=None if V == 1 else V,
-                                         lchunk=lchunk, precision=precision,
-                                         **tile)
-                    run = lambda r: fn(plan, r)   # noqa: E731
-                t = _time_fn(run, rhs, reps=reps) / V
-            except Exception:   # tiling rejected by the kernel -> skip
-                continue
-            if best is None or t < best["per_transform_s"]:
-                best = dict(tile, V=V, per_transform_s=t)
+    sweep = obs.get_recorder().span("autotune.sweep", key=key, impl=impl,
+                                    n_shards=n_shards)
+    with sweep:
+        for V in Vs:
+            if n_shards > 1:
+                rhs = jnp.asarray(rng.normal(size=(K_eff, J, V * C * 2)),
+                                  plan.d.dtype)
+            else:
+                shape = (K, J, C, 2) if V == 1 else (V, K, J, C, 2)
+                rhs = jnp.asarray(rng.normal(size=shape), plan.d.dtype)
+            for tile in candidate_tiles(K_eff, L, J, impl):
+                if estimate_vmem_bytes(impl, L=L, J=J, C2=V * C * 2,
+                                       itemsize=itemsize, lchunk=lchunk,
+                                       precision=precision,
+                                       **tile) > limit:
+                    n_skipped += 1
+                    continue
+                try:
+                    if n_shards > 1:
+                        run = _local_shard_timer(plan, tile["tk"], n_shards,
+                                                 interpret)
+                    else:
+                        fn = ops.make_dwt_fn(plan, impl, interpret=interpret,
+                                             batch=None if V == 1 else V,
+                                             lchunk=lchunk,
+                                             precision=precision, **tile)
+                        run = lambda r: fn(plan, r)   # noqa: E731
+                    # per-candidate timing lands in the Recorder: every
+                    # sweep leaves an auditable record, not just a winner
+                    t = obs.time_fn(run, rhs, reps=reps,
+                                    name="autotune.candidate", key=key,
+                                    V=V, **tile) / V
+                except Exception:   # tiling rejected by the kernel -> skip
+                    continue
+                if best is None or t < best["per_transform_s"]:
+                    best = dict(tile, V=V, per_transform_s=t)
     if best is None:
         raise RuntimeError(
             f"no viable tiling for {key}"
@@ -454,8 +462,10 @@ def autotune_overlap(plan, mesh, axis, *, V: int = 1, tk: int | None = None,
         key = _key(plan, "overlap", V, limit, n_shards,
                    overlap=mode) + f"/T{meta.tk}"
         if not refresh and key in store:
+            obs.inc("autotune.cache.hit")
             results[mode] = store[key]
             continue
+        obs.inc("autotune.cache.miss")
         if ex is None:
             ex = parallel.DistExecutor(
                 plan, mesh, axis, lane_width=V,
@@ -463,8 +473,9 @@ def autotune_overlap(plan, mesh, axis, *, V: int = 1, tk: int | None = None,
                     plan, n_shards, interpret=interpret, meta=meta),
                 local_idwt=parallel.make_fused_local_idwt(
                     plan, n_shards, interpret=interpret, meta=meta))
-        t = _time_fn(lambda x: ex.inverse_batch(x, overlap=mode), packed,
-                     reps=reps) / (n_chunks * V)
+        t = obs.time_fn(lambda x: ex.inverse_batch(x, overlap=mode), packed,
+                        reps=reps, name="autotune.overlap", key=key,
+                        overlap=mode) / (n_chunks * V)
         entry = {"overlap": mode, "per_transform_s": t}
         _store_cache(path, {key: entry})
         results[mode] = entry

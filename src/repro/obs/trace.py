@@ -1,0 +1,322 @@
+"""Unified tracing/metrics for the whole SO(3) stack.
+
+P3DFFT ships performance measurement as a first-class framework feature
+around its tuned transform, and OpenFFT's tuning story rests on a
+per-stage timing decomposition -- this module is that layer for the
+repo: ONE process-wide :class:`Recorder` that every hot layer reports
+into, instead of the pre-obs siloes (``autotune._time_fn``'s private
+timer, ``SO3Service``'s unbounded latency list, ``Transform.stats``'s
+time-less counters).
+
+Three primitives, all bounded-memory and thread-safe:
+
+  * **spans** -- ``with obs.span("plan.build", B=8): ...`` records one
+    Chrome-trace complete event (wall-clock begin/dur, pid/tid, attrs)
+    into a ring buffer AND feeds the duration into the histogram of the
+    same name.  :meth:`Recorder.add_span` records a span from explicit
+    ``perf_counter`` timestamps (e.g. a request's submit->done interval
+    measured across threads).
+  * **counters** -- ``obs.inc("plan.cache.hit")``; monotonic ints.
+  * **histograms** -- ``obs.observe("service.latency_s", dt)``; a
+    bounded sample ring plus running count/total/max, with p50/p95/p99
+    quantiles computed on demand (:meth:`Recorder.quantiles`).
+
+Export paths:
+
+  * :meth:`Recorder.dump_chrome_trace` writes Chrome-trace/Perfetto
+    JSON (``{"traceEvents": [...]}``, ts/dur in microseconds, sorted by
+    ts) -- load it at chrome://tracing or https://ui.perfetto.dev.
+    :func:`check_chrome_trace` is the structural validator CI smokes
+    traces with (non-empty, monotonic ts, required span names).
+  * :meth:`Recorder.rows` emits flat dict rows (one per histogram /
+    counter) in the shape ``benchmarks/emit.py`` tags with section +
+    git SHA, so obs summaries ride the same BENCH_*.json perf-history
+    schema as every benchmark section.
+
+Device-timeline alignment: the executor paths label their traced
+stages with ``jax.named_scope`` (zero runtime cost, shows up in XLA
+profiles), and :func:`device_annotation` optionally wraps host-side
+dispatch in ``jax.profiler.TraceAnnotation`` when
+``$REPRO_OBS_JAX_TRACE`` is set -- run under ``jax.profiler.trace``
+and the host spans line up with the device timeline.
+
+The module is dependency-free (stdlib only; :func:`time_fn` imports
+jax lazily for ``block_until_ready``), so importing it can never drag
+kernel code into a tool that only wants metrics.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import json
+import os
+import pathlib
+import threading
+import time
+
+__all__ = ["Recorder", "span", "add_span", "inc", "observe", "time_fn",
+           "get_recorder", "set_recorder", "device_annotation",
+           "check_chrome_trace"]
+
+# env flag: wrap instrumented dispatch sites in jax.profiler.TraceAnnotation
+_TRACE_ENV = "REPRO_OBS_JAX_TRACE"
+
+
+class Recorder:
+    """Thread-safe per-process span/counter/histogram store.
+
+    ``max_events`` bounds the Chrome-trace event ring (oldest events are
+    evicted first); ``max_samples`` bounds each histogram's quantile
+    sample ring while count/total/max keep running over everything ever
+    observed -- memory stays O(max_events + names * max_samples) no
+    matter how many millions of requests flow through.
+    """
+
+    def __init__(self, *, max_events: int = 65536, max_samples: int = 4096):
+        self.max_events = int(max_events)
+        self.max_samples = int(max_samples)
+        self._lock = threading.Lock()
+        self._origin = time.perf_counter()
+        self._events: collections.deque = collections.deque(
+            maxlen=self.max_events)
+        self._counters: collections.Counter = collections.Counter()
+        self._samples: dict[str, collections.deque] = {}
+        self._totals: dict[str, list] = {}   # name -> [count, total, max]
+
+    # -- recording ------------------------------------------------------
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        """Record one wall-clock span (Chrome-trace complete event) and
+        feed its duration into the histogram of the same name."""
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.add_span(name, t0, time.perf_counter(), **attrs)
+
+    def add_span(self, name: str, t0: float, t1: float, **attrs) -> None:
+        """Record a span from explicit ``time.perf_counter`` timestamps
+        (for intervals measured across threads, e.g. submit->done)."""
+        dur = max(t1 - t0, 0.0)
+        ev = {"name": name, "ph": "X", "cat": name.split(".", 1)[0],
+              "ts": (t0 - self._origin) * 1e6, "dur": dur * 1e6,
+              "pid": os.getpid(), "tid": threading.get_ident()}
+        if attrs:
+            ev["args"] = attrs
+        with self._lock:
+            self._events.append(ev)
+            self._observe_locked(name, dur)
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counters[name] += n
+
+    def observe(self, name: str, value: float) -> None:
+        """One histogram observation (bounded sample ring + running
+        count/total/max)."""
+        with self._lock:
+            self._observe_locked(name, value)
+
+    def _observe_locked(self, name: str, value: float) -> None:
+        ring = self._samples.get(name)
+        if ring is None:
+            ring = self._samples[name] = collections.deque(
+                maxlen=self.max_samples)
+            self._totals[name] = [0, 0.0, float("-inf")]
+        ring.append(float(value))
+        tot = self._totals[name]
+        tot[0] += 1
+        tot[1] += float(value)
+        tot[2] = max(tot[2], float(value))
+
+    # -- reading --------------------------------------------------------
+
+    def counters(self) -> dict:
+        with self._lock:
+            return dict(self._counters)
+
+    def events(self) -> list[dict]:
+        """Snapshot of the ring-buffered events, sorted by begin time."""
+        with self._lock:
+            evs = list(self._events)
+        return sorted(evs, key=lambda e: e["ts"])
+
+    def quantiles(self, name: str) -> dict | None:
+        """{count, mean, p50, p95, p99, max, total} of one histogram
+        (quantiles over the bounded sample ring, count/total/max running
+        over everything observed); None if nothing was observed."""
+        with self._lock:
+            ring = self._samples.get(name)
+            if not ring:
+                return None
+            vals = sorted(ring)
+            count, total, mx = self._totals[name]
+
+        def q(p):
+            return vals[min(len(vals) - 1, int(p * len(vals)))]
+
+        return {"count": count, "mean": total / count, "p50": q(0.50),
+                "p95": q(0.95), "p99": q(0.99), "max": mx, "total": total}
+
+    def summary(self, prefix=None) -> dict:
+        """{name: quantiles} for every histogram whose name starts with
+        one of ``prefix`` (a str or tuple; None = all)."""
+        with self._lock:
+            names = list(self._samples)
+        if prefix is not None:
+            names = [n for n in names if n.startswith(prefix)]
+        out = {}
+        for n in sorted(names):
+            q = self.quantiles(n)
+            if q is not None:
+                out[n] = q
+        return out
+
+    def rows(self) -> list[dict]:
+        """Flat dict rows (one per histogram / counter) in the shape
+        ``benchmarks.emit.tag_rows`` stamps with section + git SHA --
+        obs summaries ride the same BENCH_*.json schema as every
+        benchmark section."""
+        out = []
+        for name, q in self.summary().items():
+            out.append({"kind": "histogram", "name": name, **q})
+        for name, n in sorted(self.counters().items()):
+            out.append({"kind": "counter", "name": name, "count": n})
+        return out
+
+    # -- export ---------------------------------------------------------
+
+    def chrome_trace(self) -> dict:
+        """The Chrome-trace/Perfetto JSON document of the event ring."""
+        return {"displayTimeUnit": "ms", "traceEvents": self.events()}
+
+    def dump_chrome_trace(self, path) -> pathlib.Path:
+        """Write the Chrome-trace JSON to ``path`` and return it.  Load
+        at chrome://tracing or https://ui.perfetto.dev."""
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.chrome_trace()) + "\n")
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._counters.clear()
+            self._samples.clear()
+            self._totals.clear()
+            self._origin = time.perf_counter()
+
+
+def check_chrome_trace(doc: dict, required_names=()) -> list[str]:
+    """Minimal structural validation of a Chrome-trace document (what CI
+    smokes exported traces with).  Returns failure strings (empty =
+    pass): the trace must be non-empty, every event needs name/ph and
+    non-negative ts/dur, begin timestamps must be monotonic (the dump is
+    ts-sorted), and every ``required_names`` span must appear."""
+    failures = []
+    evs = doc.get("traceEvents")
+    if not evs:
+        return ["trace has no traceEvents"]
+    last_ts = float("-inf")
+    for i, ev in enumerate(evs):
+        if not ev.get("name") or ev.get("ph") not in ("X", "i", "C"):
+            failures.append(f"event {i} missing name/ph: {ev}")
+            continue
+        ts, dur = ev.get("ts", -1), ev.get("dur", 0)
+        if ts < 0 or dur < 0:
+            failures.append(f"event {i} ({ev['name']}) has negative "
+                            f"ts/dur: ts={ts} dur={dur}")
+        if ts < last_ts:
+            failures.append(f"event {i} ({ev['name']}) ts {ts} not "
+                            f"monotonic (prev {last_ts})")
+        last_ts = max(last_ts, ts)
+    seen = {ev.get("name") for ev in evs} - {None, ""}
+    for name in required_names:
+        if name not in seen:
+            failures.append(f"required span {name!r} missing from trace "
+                            f"(have {sorted(seen)})")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# the process-default recorder + module-level conveniences
+# ---------------------------------------------------------------------------
+
+_default = Recorder()
+
+
+def get_recorder() -> Recorder:
+    """The process-wide default Recorder every instrumented layer
+    reports into (planner, autotuner, executors, service)."""
+    return _default
+
+
+def set_recorder(recorder: Recorder) -> Recorder:
+    """Swap the process-default Recorder (tests / scoped profiling);
+    returns the previous one so callers can restore it."""
+    global _default
+    old, _default = _default, recorder
+    return old
+
+
+def span(name: str, **attrs):
+    """``with obs.span("plan.build", B=8): ...`` on the default
+    Recorder."""
+    return get_recorder().span(name, **attrs)
+
+
+def add_span(name: str, t0: float, t1: float, **attrs) -> None:
+    get_recorder().add_span(name, t0, t1, **attrs)
+
+
+def inc(name: str, n: int = 1) -> None:
+    get_recorder().inc(name, n)
+
+
+def observe(name: str, value: float) -> None:
+    get_recorder().observe(name, value)
+
+
+def device_annotation(name: str):
+    """Optional ``jax.profiler.TraceAnnotation`` wrapper for dispatch
+    sites: a no-op unless ``$REPRO_OBS_JAX_TRACE`` is set, in which case
+    host spans recorded here line up with the device timeline of a
+    surrounding ``jax.profiler.trace`` capture."""
+    if os.environ.get(_TRACE_ENV, "") not in ("", "0", "false"):
+        try:
+            from jax.profiler import TraceAnnotation
+            return TraceAnnotation(name)
+        except ImportError:     # pragma: no cover - jax without profiler
+            pass
+    return contextlib.nullcontext()
+
+
+def time_fn(fn, *args, reps: int = 3, name: str | None = None,
+            recorder: Recorder | None = None, sync=None, **attrs) -> float:
+    """Measure ``fn(*args)``: one untimed warmup call (compile + cache
+    fill), then ``reps`` timed calls synced once at the end; returns
+    mean seconds per call.
+
+    The public promotion of ``kernels.autotune._time_fn``: besides
+    returning the mean it records the measurement into ``recorder``
+    (default: the process Recorder) as a span named ``name`` (default
+    ``fn.__name__``) carrying ``reps``/``per_call_s`` plus any extra
+    ``attrs`` -- so a ``tune="measure"`` sweep leaves an auditable
+    per-candidate record in the trace, not just a winner in the on-disk
+    cache.  ``sync`` is the completion barrier (default
+    ``jax.block_until_ready``, imported lazily)."""
+    if sync is None:
+        import jax
+        sync = jax.block_until_ready
+    rec = get_recorder() if recorder is None else recorder
+    sync(fn(*args))                           # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    sync(r)
+    t1 = time.perf_counter()
+    per_call = (t1 - t0) / reps
+    rec.add_span(name or getattr(fn, "__name__", "time_fn"), t0, t1,
+                 reps=reps, per_call_s=per_call, **attrs)
+    return per_call

@@ -58,6 +58,7 @@ import os
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import batched, clusters as clusters_mod, parallel
 from repro.core.batched import SoftPlan
 from repro.kernels import autotune, ops
@@ -425,6 +426,16 @@ class Transform:
                 "shard_beta": 2 * self.B // self.n_shards,
                 "lane_width": s.V,
             })
+        # observability: what the shared Recorder has seen of the plan /
+        # autotune / executor layers so far (span quantiles are seconds;
+        # see repro.obs and docs/ARCHITECTURE.md "Observability")
+        rec = obs.get_recorder()
+        out["obs"] = {
+            "counters": {k: v for k, v in rec.counters().items()
+                         if k.startswith(("plan.", "autotune."))},
+            "spans": rec.summary(prefix=("plan.", "autotune.",
+                                         "executor.")),
+        }
         return out
 
     # -- owned resources (built once, cached on the Transform) ----------
@@ -598,9 +609,13 @@ class Transform:
         V = self.schedule.V
         fn = get_fn()
         outs = []
+        direction = "forward" if fn_kw == "dwt_fn" else "inverse"
         for n0 in range(0, n_total, V):
             chunk, n = ops.pad_lanes(xs[n0: n0 + V], V)
-            out = engine(self.soft_plan, chunk, **{fn_kw: fn})
+            # host-side dispatch span (launches stay async; no sync here)
+            with obs.span("executor.chunk", mode="local",
+                          direction=direction, chunk=n0 // V, lanes=n):
+                out = engine(self.soft_plan, chunk, **{fn_kw: fn})
             stats["launches"] += 1
             stats["transforms"] += n
             stats["padded_lanes"] += V - n
@@ -739,57 +754,66 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
+        obs.inc("plan.cache.hit")
         if mesh is not None:
             _CACHE_STATS["mesh_hits"] += 1
         _CACHE.move_to_end(key)
         return hit
     _CACHE_STATS["misses"] += 1
+    obs.inc("plan.cache.miss")
     if mesh is not None:
         _CACHE_STATS["mesh_misses"] += 1
 
-    base_tk = tk if tk is not None else _DEF_TK
-    if mesh is not None:
-        n_shards = int(np.prod([mesh.shape[a] for a in axis]))
-        if (2 * B) % n_shards:
-            raise ValueError(
-                f"mesh with {n_shards} shards cannot split the beta axis: "
-                f"2B = {2 * B} is not divisible by {n_shards} (use a mesh "
-                f"whose shard-axis product divides {2 * B})")
-        # the planner auto-pads the cluster axis to the mesh size, so
-        # check_mesh_compat can never fail at execute time on a plan path.
-        # pad_to = n_shards keeps the padding minimal (< n_shards zero
-        # rows; the schedule clamps tk to the per-device count instead of
-        # padding whole tk*n blocks, which could idle a shard), and the
-        # shard-balanced order is dealt over the PADDED count so every
-        # shard's block stays extent-sorted (maximal ragged truncation)
-        l_start = clusters_mod.build_cluster_table(B).rep[:, 0]
-        n_padded = -(-len(l_start) // n_shards) * n_shards
-        order = batched.shard_balanced_order(l_start, n_shards,
-                                             n_padded=n_padded)
-        soft_plan = batched.build_plan(B, dtype=dtype, pad_to=n_shards,
-                                       order=order)
-        parallel.check_mesh_compat(soft_plan, n_shards)
-    else:
-        n_shards = 1
-        soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk)
+    with obs.span("plan.build", B=B, impl=impl, tune=mode,
+                  mesh=mesh is not None):
+        base_tk = tk if tk is not None else _DEF_TK
+        if mesh is not None:
+            n_shards = int(np.prod([mesh.shape[a] for a in axis]))
+            if (2 * B) % n_shards:
+                raise ValueError(
+                    f"mesh with {n_shards} shards cannot split the beta "
+                    f"axis: 2B = {2 * B} is not divisible by {n_shards} "
+                    f"(use a mesh whose shard-axis product divides {2 * B})")
+            # the planner auto-pads the cluster axis to the mesh size, so
+            # check_mesh_compat can never fail at execute time on a plan
+            # path.  pad_to = n_shards keeps the padding minimal
+            # (< n_shards zero rows; the schedule clamps tk to the
+            # per-device count instead of padding whole tk*n blocks, which
+            # could idle a shard), and the shard-balanced order is dealt
+            # over the PADDED count so every shard's block stays
+            # extent-sorted (maximal ragged truncation)
+            l_start = clusters_mod.build_cluster_table(B).rep[:, 0]
+            n_padded = -(-len(l_start) // n_shards) * n_shards
+            order = batched.shard_balanced_order(l_start, n_shards,
+                                                 n_padded=n_padded)
+            soft_plan = batched.build_plan(B, dtype=dtype, pad_to=n_shards,
+                                           order=order)
+            parallel.check_mesh_compat(soft_plan, n_shards)
+        else:
+            n_shards = 1
+            soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk)
 
-    # mesh plans resolve (tk, tl, tj, V) against the per-device shard:
-    # the measured sweep exists only for the fused device-local kernel
-    # family, so other impls fall back to the static VMEM guard
-    measurable = impl in ("auto", "fused", "onthefly") or n_shards == 1
-    if mode == "measure" and impl != "reference" and measurable \
-            and tk is None and tl is None and tj is None:
-        schedule = _measured_schedule(soft_plan, impl, V, limit, interpret,
-                                      tune_reps, tune_cache, n_shards,
-                                      overlap, mesh, axis, lchunk, precision)
-    else:
-        schedule = _static_schedule(soft_plan, impl, V, tk, tl, tj, limit,
-                                    n_shards, overlap, lchunk, precision)
+        # mesh plans resolve (tk, tl, tj, V) against the per-device shard:
+        # the measured sweep exists only for the fused device-local kernel
+        # family, so other impls fall back to the static VMEM guard
+        measurable = impl in ("auto", "fused", "onthefly") or n_shards == 1
+        with obs.span("plan.schedule", B=B, impl=impl, tune=mode,
+                      n_shards=n_shards):
+            if mode == "measure" and impl != "reference" and measurable \
+                    and tk is None and tl is None and tj is None:
+                schedule = _measured_schedule(
+                    soft_plan, impl, V, limit, interpret, tune_reps,
+                    tune_cache, n_shards, overlap, mesh, axis, lchunk,
+                    precision)
+            else:
+                schedule = _static_schedule(
+                    soft_plan, impl, V, tk, tl, tj, limit, n_shards,
+                    overlap, lchunk, precision)
 
-    t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
-                  axis=axis if mesh is not None else None,
-                  n_shards=n_shards, n_buckets=n_buckets, interpret=interpret,
-                  tune=mode)
+        t = Transform(soft_plan=soft_plan, schedule=schedule, mesh=mesh,
+                      axis=axis if mesh is not None else None,
+                      n_shards=n_shards, n_buckets=n_buckets,
+                      interpret=interpret, tune=mode)
     _CACHE[key] = t
     while len(_CACHE) > _CACHE_MAX:
         _CACHE.popitem(last=False)

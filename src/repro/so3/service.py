@@ -20,6 +20,16 @@ Operation modes:
 (bandwidth, dtype) and runs one padded dummy launch so the first real
 request never pays compilation.  ``stats()`` reports per-request latency
 quantiles, launch counts, and lane occupancy.
+
+Observability: the service records into a :class:`repro.obs.Recorder`
+(the shared process recorder by default, or ``recorder=``): one
+``service.request`` span per request (submit -> result, with the queue
+wait as an attribute) plus ``service.pack`` / ``service.launch`` /
+``service.refine`` stage spans per launch group, and bounded
+``service.latency_s`` / ``service.queue_wait_s`` histograms --
+``stats()`` quantiles come from those rings, so memory stays constant
+under the millions-of-requests north star (the pre-obs per-request
+latency list grew without bound).
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ from concurrent.futures import Future
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import soft
 
 from .correlate import CorrelationEngine, pair_norm, peak_euler
@@ -67,7 +78,7 @@ class SO3Service:
                  lane_width: int | None = 4, impl: str = "fused",
                  tk: int | None = 8, interpret=None,
                  max_wait_ms: float = 2.0, mesh=None,
-                 axis=("data", "model")):
+                 axis=("data", "model"), recorder=None):
         """lane_width=None takes V per bandwidth from the plan's autotune
         / VMEM-guard resolution (repro.plan) instead of a fixed width.
 
@@ -76,10 +87,16 @@ class SO3Service:
         cluster-sharded, one all-to-all per launch group), and
         multi-chunk drains inherit the plan's overlap pipeline
         (Schedule.overlap, "pipelined" on mesh plans by default) --
-        each chunk's collective hidden behind a neighbor's kernel."""
+        each chunk's collective hidden behind a neighbor's kernel.
+
+        recorder: the :class:`repro.obs.Recorder` spans and latency
+        histograms land in (default: the shared process recorder, so
+        service traffic shows up in the same trace as planner/autotune/
+        executor spans)."""
         self.bandwidths = tuple(bandwidths)
         self.lane_width = lane_width
         self.max_wait_ms = max_wait_ms
+        self.obs = obs.get_recorder() if recorder is None else recorder
         self._engine_kw = dict(dtype=dtype, impl=impl, tk=tk,
                                interpret=interpret, lane_width=lane_width,
                                mesh=mesh, axis=axis)
@@ -94,7 +111,6 @@ class SO3Service:
         self._worker: threading.Thread | None = None
         self._running = False
         self._seq = 0
-        self._latencies: list[float] = []
         self._completed = 0
         self._warmup_s: dict[int, float] = {}
         # per-bandwidth lane widths resolved by the plans (lane_width=None)
@@ -165,22 +181,34 @@ class SO3Service:
     def _process_group(self, B: int, group: list[_Pending]) -> None:
         """Run one packed launch group (<= lane_width requests, one B)."""
         eng = self.engine(B)
+        t_start = time.perf_counter()   # group leaves the queue here
         try:
             with self._serve_lock:
-                fs = [eng.as_coeffs(p.f) for p in group]
-                gs = [eng.as_coeffs(p.g) for p in group]
-                C = eng.correlation_grids(fs, gs)  # ONE fused launch/lane
+                with self.obs.span("service.pack", B=B, requests=len(group)):
+                    fs = [eng.as_coeffs(p.f) for p in group]
+                    gs = [eng.as_coeffs(p.g) for p in group]
+                with self.obs.span("service.launch", B=B,
+                                   requests=len(group)):
+                    C = eng.correlation_grids(fs, gs)  # ONE launch/lane
             done = time.perf_counter()
-            results = [peak_euler(C[n], B, refine=p.refine,
-                                  norm=pair_norm(fs[n], gs[n]))
-                       for n, p in enumerate(group)]
+            with self.obs.span("service.refine", B=B, requests=len(group)):
+                results = [peak_euler(C[n], B, refine=p.refine,
+                                      norm=pair_norm(fs[n], gs[n]))
+                           for n, p in enumerate(group)]
         except Exception as e:  # pragma: no cover - surfaced via futures
             for p in group:
                 if not p.future.done():
                     p.future.set_exception(e)
             return
-        with self._lock:        # stats() reads these under the same lock
-            self._latencies.extend(done - p.t_submit for p in group)
+        for p in group:
+            # span covers submit -> grids ready; queue wait = time spent
+            # queued before this group's processing started
+            wait = max(t_start - p.t_submit, 0.0)
+            self.obs.add_span("service.request", p.t_submit, done, B=B,
+                              queue_wait_s=wait)
+            self.obs.observe("service.queue_wait_s", wait)
+            self.obs.observe("service.latency_s", done - p.t_submit)
+        with self._lock:        # stats() reads this under the same lock
             self._completed += len(group)
         for p, r in zip(group, results):
             p.future.set_result(r)
@@ -275,9 +303,13 @@ class SO3Service:
     # -- observability ------------------------------------------------------
 
     def stats(self) -> dict:
-        """Aggregate serving stats across all engines."""
+        """Aggregate serving stats across all engines.
+
+        Latency quantiles come from the Recorder's bounded
+        ``service.latency_s`` histogram (ring of recent samples + running
+        count/total/max), not an unbounded per-request list -- constant
+        memory no matter how many requests this process has served."""
         with self._lock:
-            lat = sorted(self._latencies)
             eng_stats = {B: dict(e.stats) for B, e in self._engines.items()}
             widths = {B: e.lane_width for B, e in self._engines.items()}
             queued = sum(len(q) for q in self._queues.values())
@@ -298,11 +330,12 @@ class SO3Service:
             "warmup_s": warmup_s,
             "engines": eng_stats,
         }
-        if lat:
-            out["latency_s"] = {
-                "mean": float(np.mean(lat)),
-                "p50": float(lat[len(lat) // 2]),
-                "p95": float(lat[min(len(lat) - 1, int(0.95 * len(lat)))]),
-                "max": float(lat[-1]),
-            }
+        # gate on OUR completions: the shared recorder may hold samples
+        # from other services/tests, a fresh service must not report them
+        if completed:
+            q = self.obs.quantiles("service.latency_s")
+            if q:
+                out["latency_s"] = {k: q[k]
+                                    for k in ("mean", "p50", "p95", "p99",
+                                              "max")}
         return out

@@ -47,3 +47,20 @@ def test_architecture_doc_exists_and_names_symbols():
 @pytest.mark.parametrize("dotted", _documented_symbols() or ["repro.plan"])
 def test_documented_symbol_resolves(dotted):
     _resolve(dotted)  # raises ImportError / AttributeError on a stale doc
+
+
+def test_observability_section_covers_obs_api():
+    """The Observability section must name the repro.obs API (each name
+    listed here is then resolved by test_documented_symbol_resolves, so
+    the doc and the module can't drift apart silently)."""
+    syms = set(_documented_symbols())
+    required = {
+        "repro.obs", "repro.obs.Recorder", "repro.obs.span",
+        "repro.obs.time_fn", "repro.obs.get_recorder",
+        "repro.obs.set_recorder", "repro.obs.check_chrome_trace",
+        "repro.obs.device_annotation",
+        "repro.obs.Recorder.dump_chrome_trace", "repro.obs.Recorder.rows",
+        "repro.obs.Recorder.quantiles", "repro.launch.profile_so3",
+    }
+    missing = sorted(required - syms)
+    assert not missing, f"ARCHITECTURE.md missing obs symbols: {missing}"

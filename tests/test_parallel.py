@@ -278,3 +278,40 @@ def test_autotune_overlap_key_segment():
     # static heuristic: mesh plans pipeline, single-shard plans don't
     assert autotune.static_overlap(1) == "off"
     assert autotune.static_overlap(2) == "pipelined"
+
+
+def test_transform_batch_stats_parity_across_overlap():
+    """Transform.stats accounting is schedule-independent: the serial
+    drain and the double-buffered pipeline count identical launches /
+    transforms / padded lanes, and an external ``stats=`` sink absorbs
+    the counts without touching the transform's own counters."""
+    from repro import plan as plan_mod
+    mesh = make_mesh((1,), ("data",))
+    t = plan_mod.plan(8, impl="fused", V=2, tk=4, mesh=mesh, axis=("data",))
+    t.reset_stats()
+    fhats = jnp.stack([jnp.asarray(soft.random_coeffs(8, seed=s))
+                       for s in range(5)])   # 5 lanes on V=2: 3 chunks, 1 pad
+    sinks, outs = {}, {}
+    for mode in ("off", "pipelined"):
+        sink = dict(launches=0, transforms=0, padded_lanes=0)
+        outs[mode] = np.asarray(t.inverse_batch(fhats, stats=sink,
+                                                overlap=mode))
+        sinks[mode] = sink
+    assert sinks["off"] == sinks["pipelined"] == \
+        {"launches": 3, "transforms": 5, "padded_lanes": 1}
+    np.testing.assert_array_equal(outs["off"], outs["pipelined"])
+    # the forward direction counts the same way
+    grids = jnp.asarray(outs["off"])
+    fwd = {}
+    for mode in ("off", "pipelined"):
+        sink = dict(launches=0, transforms=0, padded_lanes=0)
+        t.forward_batch(grids, stats=sink, overlap=mode)
+        fwd[mode] = sink
+    assert fwd["off"] == fwd["pipelined"] == \
+        {"launches": 3, "transforms": 5, "padded_lanes": 1}
+    # external sinks took every count: the plan's own stats stayed zero
+    assert t.stats == {"launches": 0, "transforms": 0, "padded_lanes": 0}
+    # and without a sink the counts land on the transform itself
+    t.inverse_batch(fhats[:2])
+    assert t.stats == {"launches": 1, "transforms": 2, "padded_lanes": 0}
+    t.reset_stats()
