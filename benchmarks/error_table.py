@@ -60,13 +60,23 @@ def run(bandwidths=(16, 32, 64), runs=3, fast=False):
     return rows
 
 
-def precision_rows(bandwidths=(16, 32), fast=False):
+def precision_rows(bandwidths=(16, 32), fast=False, **plan_kw):
     """Per-(B, precision) streaming error table: the measured fp32-vs-bf16
     deviation of the fused streaming kernel, validated against the static
     gate in kernels.autotune.PRECISION_ERROR_BOUNDS.  This table is what
     justifies static_precision()'s bf16 engagement threshold; a bound
     violation here means the heuristic would ship wrong answers, so it is
     a hard failure (SystemExit 1), not a report line.
+
+    At paper-scale bandwidths (B >= 128) the planner builds the plans
+    d-free (streaming construction), so this is ALSO the program that
+    turns an EXTRAPOLATED entry of PRECISION_ERROR_BOUNDS into a
+    measured one:
+
+        PYTHONPATH=src python benchmarks/error_table.py --paper-scale
+
+    Extra ``plan_kw`` (V=1 for the paper-scale run) are forwarded to the
+    planner.
     """
     import jax.numpy as jnp
     from repro import plan
@@ -78,9 +88,10 @@ def precision_rows(bandwidths=(16, 32), fast=False):
     for B in bandwidths:
         fhat = soft.random_coeffs(B, seed=0).astype(np.complex64)
         lchunk = max(1, B // 4)
-        t32 = plan(B, dtype=jnp.float32, impl="fused", lchunk=lchunk)
+        t32 = plan(B, dtype=jnp.float32, impl="fused", lchunk=lchunk,
+                   **plan_kw)
         t16 = plan(B, dtype=jnp.float32, impl="fused", lchunk=lchunk,
-                   precision="bf16")
+                   precision="bf16", **plan_kw)
         f32, f16 = t32.inverse(fhat), t16.inverse(fhat)
         inv_rel = float(np.abs(np.asarray(f16) - np.asarray(f32)).max()
                         / np.abs(np.asarray(f32)).max())
@@ -89,8 +100,11 @@ def precision_rows(bandwidths=(16, 32), fast=False):
                         / np.abs(np.asarray(b32)).max())
         bound = autotune.PRECISION_ERROR_BOUNDS[B]
         rows.append({"B": B, "precision": "bf16", "lchunk": lchunk,
+                     "streaming": bool(t32.describe()["streaming"]),
                      "fwd_rel_err": fwd_rel, "inv_rel_err": inv_rel,
-                     "bound": bound})
+                     "bound": bound,
+                     "bound_extrapolated":
+                         B in autotune.PRECISION_BOUND_EXTRAPOLATED})
         if max(fwd_rel, inv_rel) > bound:
             violations.append(
                 f"B={B}: bf16 rel err {max(fwd_rel, inv_rel):.2e} exceeds "
@@ -106,7 +120,24 @@ PAPER = {32: (1.10e-14, 7.91e-13), 64: (2.79e-14, 3.08e-12),
          128: (6.23e-14, 1.89e-11)}
 
 
-def main(fast=False):
+def _print_precision(prows):
+    print("# precision ladder (fused streaming, fp32 vs bf16)")
+    print("B,precision,lchunk,streaming,fwd_rel_err,inv_rel_err,bound,"
+          "bound_status")
+    for r in prows:
+        status = "EXTRAPOLATED" if r["bound_extrapolated"] else "measured"
+        print(f"{r['B']},{r['precision']},{r['lchunk']},"
+              f"{r['streaming']},{r['fwd_rel_err']:.2e},"
+              f"{r['inv_rel_err']:.2e},{r['bound']:.2e},{status}")
+
+
+def main(fast=False, paper_scale=False):
+    if paper_scale:
+        # d-free streaming plans at B = 128: the measurement that turned
+        # PRECISION_ERROR_BOUNDS[128] from an extrapolation into a value
+        prows = precision_rows(bandwidths=(128,), V=1)
+        _print_precision(prows)
+        return prows
     rows = run(fast=fast)
     print("# error_table (paper Table 1)")
     print("B,dtype,abs_err,rel_err,paper_abs,paper_rel,roundtrip_s")
@@ -116,14 +147,17 @@ def main(fast=False):
         print(f"{r['B']},{dt},{r['abs_err_mean']:.2e},{r['rel_err_mean']:.2e},"
               f"{pa:.2e},{pr:.2e},{r.get('roundtrip_s', 0):.3f}")
     prows = precision_rows(fast=fast)
-    print("# precision ladder (fused streaming, fp32 vs bf16)")
-    print("B,precision,lchunk,fwd_rel_err,inv_rel_err,bound")
-    for r in prows:
-        print(f"{r['B']},{r['precision']},{r['lchunk']},"
-              f"{r['fwd_rel_err']:.2e},{r['inv_rel_err']:.2e},"
-              f"{r['bound']:.2e}")
+    _print_precision(prows)
     return rows + prows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="measure the bf16-vs-fp32 error of the d-free "
+                         "streaming schedules at B=128 (replaces the "
+                         "extrapolated PRECISION_ERROR_BOUNDS entry)")
+    args = ap.parse_args()
+    main(fast=args.fast, paper_scale=args.paper_scale)

@@ -33,7 +33,9 @@ import jax.numpy as jnp
 from . import clusters as clusters_mod
 from . import quadrature, soft, wigner
 
-__all__ = ["SoftPlan", "build_plan", "forward_clustered", "inverse_clustered",
+__all__ = ["SoftPlan", "build_plan", "plan_cache_stats",
+           "fft_analysis_slab", "streamed_rhs", "streamed_synthesis",
+           "forward_clustered", "inverse_clustered",
            "forward_clustered_batch", "inverse_clustered_batch"]
 
 
@@ -43,11 +45,18 @@ class SoftPlan:
 
     All arrays are jnp; shapes use K = #clusters (padded to `pad_to` if
     given), L = B, J = 2B, C = 8 member slots.
+
+    ``d is None`` marks a STREAMING plan (build_plan(streaming=True)):
+    the dense (K, L, J) Wigner table is never materialized -- on the
+    host or anywhere else -- and the recurrence family (fused/onthefly
+    kernels, seeded from ``table.rep``) is the only executor.  The
+    dense-table consumers (reference einsum, dense/ragged kernels,
+    bucketed truncation) reject streaming plans loudly.
     """
 
     B: int
     table: clusters_mod.ClusterTable        # host metadata (numpy)
-    d: jnp.ndarray          # (K, L, J)  fundamental Wigner blocks
+    d: jnp.ndarray | None   # (K, L, J)  fundamental Wigner blocks, or None
     gather_m: jnp.ndarray   # (K, C) int32  FFT bins
     gather_mp: jnp.ndarray  # (K, C)
     scatter_m: jnp.ndarray  # (K, C) int32  dense-layout bins (trash = 2B-1)
@@ -58,24 +67,51 @@ class SoftPlan:
     scale: jnp.ndarray      # (L,)   (2l+1)/(8 pi B)
     parity: jnp.ndarray     # (L,)   (-1)^l
     n_padded: int           # K after padding
+    plan_dtype: str = "<f8" # real dtype str (the d-table's when present)
 
     @property
     def n_clusters(self) -> int:
         return self.table.n_clusters
 
+    @property
+    def streaming(self) -> bool:
+        """True when the dense Wigner table was never built (d is None)."""
+        return self.d is None
 
+    @property
+    def dtype(self):
+        """The plan's real dtype; valid for dense AND streaming plans
+        (``plan.d.dtype`` is not -- prefer this everywhere)."""
+        return self.d.dtype if self.d is not None else jnp.dtype(self.plan_dtype)
+
+    def require_dense(self, consumer: str):
+        """The dense (K, L, J) table, or a loud error on streaming plans."""
+        if self.d is None:
+            raise ValueError(
+                f"{consumer} needs the dense (K, L, J) Wigner table, but "
+                f"this B={self.B} plan was built streaming (d=None; the "
+                f"table was never materialized).  Use the recurrence "
+                f"family (impl='fused'/'onthefly') or rebuild with "
+                f"build_plan(streaming=False)")
+        return self.d
+
+
+# `d` stays a pytree child when present; a streaming plan's None child
+# flattens to zero leaves (None is a registered empty pytree), so jit
+# tracing works unchanged for both variants.
 _PLAN_LEAVES = ("d", "gather_m", "gather_mp", "scatter_m", "scatter_mp",
                 "sign", "reflected", "w", "scale", "parity")
 
 
 def _plan_flatten(p: SoftPlan):
-    return tuple(getattr(p, n) for n in _PLAN_LEAVES), (p.B, p.table, p.n_padded)
+    return (tuple(getattr(p, n) for n in _PLAN_LEAVES),
+            (p.B, p.table, p.n_padded, p.plan_dtype))
 
 
 def _plan_unflatten(aux, leaves):
-    B, table, n_padded = aux
+    B, table, n_padded, plan_dtype = aux
     return SoftPlan(B=B, table=table, n_padded=n_padded,
-                    **dict(zip(_PLAN_LEAVES, leaves)))
+                    plan_dtype=plan_dtype, **dict(zip(_PLAN_LEAVES, leaves)))
 
 
 jax.tree_util.register_pytree_node(SoftPlan, _plan_flatten, _plan_unflatten)
@@ -128,38 +164,79 @@ def shard_balanced_order(l_start: np.ndarray, n_shards: int,
     return np.concatenate(hands).astype(np.int64)
 
 
-# LRU-bounded: a plan holds the full (K, L, J) Wigner table, so unbounded
-# memoization across order/mesh sweeps would accumulate until OOM.
+# Byte-bounded LRU: a dense plan holds the full (K, L, J) Wigner table
+# (~1 GB at B = 128), so bounding by COUNT alone (the old max-8 rule) lets
+# a paper-scale B-sweep OOM the host.  Entries are (plan, nbytes); eviction
+# drops least-recently-used plans until the total fits $REPRO_PLAN_CACHE_BYTES
+# (the newest plan is always kept, even if it alone exceeds the bound).
 _PLAN_CACHE: collections.OrderedDict = collections.OrderedDict()
-_PLAN_CACHE_MAX = 8
+_PLAN_CACHE_DEFAULT_BYTES = 2 * 1024 ** 3
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def plan_cache_bytes_limit() -> int:
+    """Cache bound in bytes; override with $REPRO_PLAN_CACHE_BYTES."""
+    import os
+    return int(os.environ.get("REPRO_PLAN_CACHE_BYTES",
+                              _PLAN_CACHE_DEFAULT_BYTES))
+
+
+def _plan_nbytes(plan: SoftPlan) -> int:
+    return int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree_util.tree_leaves(plan)))
+
+
+def plan_cache_stats() -> dict:
+    """Counters + byte accounting for the build_plan memo."""
+    return dict(_PLAN_CACHE_STATS,
+                plans=len(_PLAN_CACHE),
+                bytes=sum(n for _, n in _PLAN_CACHE.values()),
+                bytes_limit=plan_cache_bytes_limit())
+
+
+def _plan_cache_put(key, plan: SoftPlan) -> None:
+    _PLAN_CACHE[key] = (plan, _plan_nbytes(plan))
+    limit = plan_cache_bytes_limit()
+    while len(_PLAN_CACHE) > 1 and \
+            sum(n for _, n in _PLAN_CACHE.values()) > limit:
+        _PLAN_CACHE.popitem(last=False)
+        _PLAN_CACHE_STATS["evictions"] += 1
 
 
 def build_plan(B: int, dtype=jnp.float64, pad_to: int | None = None,
-               order: np.ndarray | None = None) -> SoftPlan:
+               order: np.ndarray | None = None,
+               streaming: bool = False) -> SoftPlan:
     """Precompute the clustered-DWT plan (paper: 'precomputation of the
     matrices using the three-term recurrence').
 
     pad_to: pad the cluster axis to a multiple (for even mesh sharding);
     padded rows have sign 0 everywhere and a zero Wigner block.
     order: optional cluster permutation (see shard_balanced_order).
+    streaming: build WITHOUT the dense (K, L, J) Wigner table (d=None) --
+    neither `wigner.wigner_d_fundamental` nor any other O(B^3)-sized host
+    array is touched, so plan construction stays O(K) and paper-scale
+    bandwidths (B >= 128) build in milliseconds of host RSS instead of
+    gigabytes.  All non-d metadata is byte-identical to the dense build;
+    executors that need d reject the plan loudly (see SoftPlan).
 
-    Plans are memoized by (B, dtype, pad_to, order): benchmarks that sweep
-    schedules at a fixed bandwidth reuse one plan (and one Wigner table via
-    the wigner.wigner_d_fundamental cache) instead of rebuilding it per
-    schedule.  SoftPlan is a frozen dataclass of immutable jnp arrays, so
-    sharing is safe.
+    Plans are memoized by (B, dtype, pad_to, order, streaming): benchmarks
+    that sweep schedules at a fixed bandwidth reuse one plan (and one Wigner
+    table via the wigner.wigner_d_fundamental cache) instead of rebuilding
+    it per schedule.  SoftPlan is a frozen dataclass of immutable jnp
+    arrays, so sharing is safe.
     """
     key = (B, jnp.dtype(dtype).str, pad_to,
-           None if order is None else np.asarray(order).tobytes())
+           None if order is None else np.asarray(order).tobytes(),
+           bool(streaming))
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         _PLAN_CACHE.move_to_end(key)
-        return hit
+        _PLAN_CACHE_STATS["hits"] += 1
+        return hit[0]
+    _PLAN_CACHE_STATS["misses"] += 1
     tab = clusters_mod.build_cluster_table(B)
     if order is not None:
         tab = _permute_table(tab, np.asarray(order))
-    fund, _ = wigner.wigner_d_fundamental(B)          # (P, L, J) f64
-    d = fund[tab.fund_row]                            # (K, L, J) cluster order
 
     K = tab.n_clusters
     Kp = K if pad_to is None else ((K + pad_to - 1) // pad_to) * pad_to
@@ -170,11 +247,17 @@ def build_plan(B: int, dtype=jnp.float64, pad_to: int | None = None,
         pad = np.full((Kp - len(x),) + x.shape[1:], fill, dtype=x.dtype)
         return np.concatenate([x, pad], axis=0)
 
+    if streaming:
+        d = None
+    else:
+        fund, _ = wigner.wigner_d_fundamental(B)      # (P, L, J) f64
+        d = jnp.asarray(padk(fund[tab.fund_row]), dtype=dtype)
+
     trash = 2 * B - 1
     plan = SoftPlan(
         B=B,
         table=tab,
-        d=jnp.asarray(padk(d), dtype=dtype),
+        d=d,
         gather_m=jnp.asarray(padk(tab.gather_m)),
         gather_mp=jnp.asarray(padk(tab.gather_mp)),
         scatter_m=jnp.asarray(padk(tab.scatter_m, fill=trash)),
@@ -185,10 +268,11 @@ def build_plan(B: int, dtype=jnp.float64, pad_to: int | None = None,
         scale=jnp.asarray((2 * np.arange(B) + 1) / (8 * np.pi * B), dtype=dtype),
         parity=jnp.asarray((-1.0) ** np.arange(B), dtype=dtype),
         n_padded=Kp,
+        # canonicalized (x64-disabled truncates f64 -> f32), so streaming
+        # and dense builds report the same plan.dtype
+        plan_dtype=jnp.empty(0, dtype=dtype).dtype.str,
     )
-    _PLAN_CACHE[key] = plan
-    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
-        _PLAN_CACHE.popitem(last=False)
+    _plan_cache_put(key, plan)
     return plan
 
 
@@ -255,6 +339,7 @@ def make_bucketed_dwt_fn(plan: SoftPlan, n_shards: int = 1, n_buckets: int = 8):
     """dwt_fn with static l-truncation per extent bucket (paper P3 ragged
     tiling as pure jnp): each bucket contracts only l >= l0 rows, skipping
     the zero triangle (~2.4x fewer FLOPs and d-table bytes at B = 512)."""
+    plan.require_dense("make_bucketed_dwt_fn")
     slices = bucket_boundaries(plan, n_shards, n_buckets)
     kloc = plan.n_padded // n_shards
 
@@ -286,6 +371,77 @@ def fft_synthesis(gbin):
 
 
 # ---------------------------------------------------------------------------
+# beta-slab streaming of the grid FFT stages
+#
+# Both FFT stages transform axes 0 and 2 only -- the beta axis (j) rides
+# along untouched -- so the (2B)^3 grid can be processed in j-slabs with
+# BITWISE-identical results: each length-2B 1-D FFT sees exactly the same
+# input column whether it is batched over 2B or over a slab's worth of
+# columns.  Streaming plans use these paths so the device never holds the
+# monolithic S / gbin intermediates (nor the (K, C, J) complex gather
+# temporaries) that the dense path materializes.
+#
+# The only j-coupling in the surrounding gather/scatter is the beta
+# reflection: a reflected member's output slab [j0, j1) reads the MIRROR
+# slab [J-j1, J-j0) reversed.  Slab bounds need no symmetry for that --
+# the mirror slab's FFT is computed directly from the matching f slab.
+# ---------------------------------------------------------------------------
+
+GRID_N_SLABS = 4
+
+
+def _slab_bounds(J: int, n_slabs: int = GRID_N_SLABS):
+    cuts = np.linspace(0, J, min(n_slabs, J) + 1).astype(int)
+    return [(int(cuts[i]), int(cuts[i + 1])) for i in range(len(cuts) - 1)
+            if cuts[i] < cuts[i + 1]]
+
+
+def fft_analysis_slab(f, j0: int, j1: int):
+    """fft_analysis restricted to beta rows [j0, j1): bitwise equal to
+    fft_analysis(f)[:, j0:j1, :] without forming the full S."""
+    n = f.shape[0]
+    return (n * n) * jnp.fft.ifft(jnp.fft.ifft(f[:, j0:j1, :], axis=0),
+                                  axis=2)
+
+
+def _gather_rhs_slab(plan: SoftPlan, S_direct, S_mirror, j0: int, j1: int):
+    """rhs[:, j0:j1] from the direct S slab [j0, j1) and its mirror slab
+    [J-j1, J-j0) (reversed for reflected members)."""
+    direct = S_direct[plan.gather_m, :, plan.gather_mp]       # (K, C, js)
+    mirror = S_mirror[plan.gather_m, :, plan.gather_mp][..., ::-1]
+    Sm = jnp.where(plan.reflected[..., None], mirror, direct)
+    Sm = Sm * (plan.sign[..., None] * plan.w[None, None, j0:j1])
+    rhs = jnp.stack([Sm.real, Sm.imag], axis=-1)              # (K, C, js, 2)
+    return jnp.swapaxes(rhs, 1, 2)                            # (K, js, C, 2)
+
+
+def streamed_rhs(plan: SoftPlan, f):
+    """FFT-analysis + gather, streamed in beta slabs: bitwise equal to
+    _gather_rhs(plan, fft_analysis(f)) with O((2B)^2 * slab) intermediates."""
+    J = 2 * plan.B
+    parts = []
+    for j0, j1 in _slab_bounds(J):
+        S_direct = fft_analysis_slab(f, j0, j1)
+        S_mirror = fft_analysis_slab(f, J - j1, J - j0)
+        parts.append(_gather_rhs_slab(plan, S_direct, S_mirror, j0, j1))
+    return jnp.concatenate(parts, axis=1)
+
+
+def streamed_synthesis(plan: SoftPlan, gc):
+    """Scatter-to-bins + FFT-synthesis, streamed in beta slabs: bitwise
+    equal to fft_synthesis(_scatter_bins(plan, gc)) without the monolithic
+    (2B+1, 2B, 2B+1) bin buffer."""
+    J = 2 * plan.B
+    parts = []
+    for j0, j1 in _slab_bounds(J):
+        direct = gc[:, j0:j1, :]
+        mirror = gc[:, J - j1:J - j0, :][:, ::-1, :]
+        gs = jnp.where(plan.reflected[:, None, :], mirror, direct)
+        parts.append(fft_synthesis(_scatter_bins_nomirror(plan, gs)))
+    return jnp.concatenate(parts, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # stage 2: clustered DWT (forward) / iDWT (inverse)
 # ---------------------------------------------------------------------------
 
@@ -309,19 +465,21 @@ def dwt_apply(plan: SoftPlan, rhs):
     Kept as its own function: this is the compute hot-spot the Pallas kernel
     (kernels/dwt.py) replaces 1:1.
     """
+    d = plan.require_dense("dwt_apply")
     C2 = rhs.shape[2] * rhs.shape[3]
-    out = jnp.einsum("klj,kjc->klc", plan.d,
+    out = jnp.einsum("klj,kjc->klc", d,
                      rhs.reshape(rhs.shape[0], rhs.shape[1], C2),
-                     preferred_element_type=plan.d.dtype)
+                     preferred_element_type=d.dtype)
     return out.reshape(out.shape[0], out.shape[1], rhs.shape[2], rhs.shape[3])
 
 
 def idwt_apply(plan: SoftPlan, lhs):
     """The clustered iDWT contraction: (K,L,J) x (K,L,C,2) -> (K,J,C,2)."""
+    d = plan.require_dense("idwt_apply")
     C2 = lhs.shape[2] * lhs.shape[3]
-    out = jnp.einsum("klj,klc->kjc", plan.d,
+    out = jnp.einsum("klj,klc->kjc", d,
                      lhs.reshape(lhs.shape[0], lhs.shape[1], C2),
-                     preferred_element_type=plan.d.dtype)
+                     preferred_element_type=d.dtype)
     return out.reshape(out.shape[0], out.shape[1], lhs.shape[2], lhs.shape[3])
 
 
@@ -350,17 +508,23 @@ def _gather_coeffs(plan: SoftPlan, fhat):
     return jnp.stack([lhs.real, lhs.imag], axis=-1)  # (K, L, C, 2)
 
 
-def _scatter_bins(plan: SoftPlan, g):
-    """Scatter g[k, j, c] (complex) into FFT bins (2B, j, 2B)."""
+def _scatter_bins_nomirror(plan: SoftPlan, g):
+    """Scatter g[k, j, c] (complex, reflection already applied) into FFT
+    bins (2B, j, 2B).  j-independent, so slab callers pass partial-j g."""
     B = plan.B
-    g = jnp.where(plan.reflected[:, None, :], g[:, ::-1, :], g)
-    buf = jnp.zeros((2 * B + 1, 2 * B, 2 * B + 1), dtype=g.dtype)
+    buf = jnp.zeros((2 * B + 1, g.shape[1], 2 * B + 1), dtype=g.dtype)
     # member bins; unused slots -> trash bin 2B (sliced off)
     gm = jnp.where(plan.sign != 0, plan.gather_m, 2 * B).reshape(-1)
     gmp = jnp.where(plan.sign != 0, plan.gather_mp, 2 * B).reshape(-1)
     buf = buf.at[gm, :, gmp].set(
         jnp.swapaxes(g, 1, 2).reshape(-1, g.shape[1]), mode="drop")
     return buf[: 2 * B, :, : 2 * B]
+
+
+def _scatter_bins(plan: SoftPlan, g):
+    """Scatter g[k, j, c] (complex) into FFT bins (2B, j, 2B)."""
+    g = jnp.where(plan.reflected[:, None, :], g[:, ::-1, :], g)
+    return _scatter_bins_nomirror(plan, g)
 
 
 # ---------------------------------------------------------------------------
@@ -376,13 +540,26 @@ def _forward_jit(plan: SoftPlan, f):
     return _scatter_coeffs(plan, outc)
 
 
+def _require_recurrence_fn(plan: SoftPlan, fn, which: str):
+    if plan.streaming and fn is None:
+        raise ValueError(
+            f"streaming plan (B={plan.B}, d=None) has no dense Wigner table "
+            f"for the jnp einsum fallback; pass a recurrence-family "
+            f"{which} (kernels.ops.make_{which}(..., impl='fused'/'onthefly'))")
+
+
 def forward_clustered(plan: SoftPlan, f, dwt_fn=None):
     """FSOFT via the clustered DWT.  `dwt_fn` lets callers swap in the
-    Pallas kernel (same (plan, rhs) -> out contract)."""
+    Pallas kernel (same (plan, rhs) -> out contract).
+
+    Streaming plans route the FFT+gather stage through beta slabs
+    (streamed_rhs) -- bitwise-identical output, no monolithic grid
+    intermediate -- and require a recurrence-family dwt_fn."""
+    _require_recurrence_fn(plan, dwt_fn, "dwt_fn")
     if dwt_fn is None:
         return _forward_jit(plan, f)
-    S = fft_analysis(f)
-    rhs = _gather_rhs(plan, S)
+    rhs = streamed_rhs(plan, f) if plan.streaming \
+        else _gather_rhs(plan, fft_analysis(f))
     out = dwt_fn(plan, rhs)
     outc = out[..., 0] + 1j * out[..., 1]
     return _scatter_coeffs(plan, outc)
@@ -398,14 +575,17 @@ def _inverse_jit(plan: SoftPlan, fhat):
 
 
 def inverse_clustered(plan: SoftPlan, fhat, idwt_fn=None):
-    """iFSOFT via the clustered iDWT."""
+    """iFSOFT via the clustered iDWT.  Streaming plans scatter + synthesize
+    in beta slabs (streamed_synthesis); see forward_clustered."""
+    _require_recurrence_fn(plan, idwt_fn, "idwt_fn")
     if idwt_fn is None:
         return _inverse_jit(plan, fhat)
     lhs = _gather_coeffs(plan, fhat)
     g = idwt_fn(plan, lhs)
     gc = g[..., 0] + 1j * g[..., 1]
-    gbin = _scatter_bins(plan, gc)
-    return fft_synthesis(gbin)
+    if plan.streaming:
+        return streamed_synthesis(plan, gc)
+    return fft_synthesis(_scatter_bins(plan, gc))
 
 
 # ---------------------------------------------------------------------------
@@ -424,8 +604,12 @@ def forward_clustered_batch(plan: SoftPlan, f, dwt_fn=None):
     are reused across all V lanes).  dwt_fn=None falls back to a vmapped
     einsum (pure jnp, differentiable).
     """
-    S = jax.vmap(fft_analysis)(f)
-    rhs = jax.vmap(lambda s: _gather_rhs(plan, s))(S)   # (V, K, J, C, 2)
+    _require_recurrence_fn(plan, dwt_fn, "dwt_fn")
+    if plan.streaming:
+        rhs = jax.vmap(lambda ff: streamed_rhs(plan, ff))(f)
+    else:
+        S = jax.vmap(fft_analysis)(f)
+        rhs = jax.vmap(lambda s: _gather_rhs(plan, s))(S)  # (V, K, J, C, 2)
     if dwt_fn is None:
         out = jax.vmap(lambda r: dwt_apply(plan, r))(rhs)
     else:
@@ -438,11 +622,14 @@ def inverse_clustered_batch(plan: SoftPlan, fhat, idwt_fn=None):
     """iFSOFT of a batch: fhat (V, B, 2B-1, 2B-1) -> samples (V, 2B, 2B,
     2B).  idwt_fn must be batch-aware when given (ops.make_idwt_fn(...,
     batch=V)); see forward_clustered_batch."""
+    _require_recurrence_fn(plan, idwt_fn, "idwt_fn")
     lhs = jax.vmap(lambda h: _gather_coeffs(plan, h))(fhat)  # (V, K, L, C, 2)
     if idwt_fn is None:
         g = jax.vmap(lambda x: idwt_apply(plan, x))(lhs)
     else:
         g = idwt_fn(plan, lhs)                            # (V, K, J, C, 2)
     gc = g[..., 0] + 1j * g[..., 1]
+    if plan.streaming:
+        return jax.vmap(lambda x: streamed_synthesis(plan, x))(gc)
     gbin = jax.vmap(lambda x: _scatter_bins(plan, x))(gc)
     return jax.vmap(fft_synthesis)(gbin)

@@ -207,7 +207,8 @@ def _normalize_local_dwt(plan, local_dwt, einsum_spec):
             return jnp.einsum(einsum_spec, d, x2,
                               preferred_element_type=d.dtype)
     # legacy contract: bare fn(d_shard, x2)
-    return LocalDWT((plan.d,), (True,), local_dwt)
+    return LocalDWT((plan.require_dense("the legacy local_dwt contract"),),
+                    (True,), local_dwt)
 
 
 def make_bucketed_local_dwt(slices, B):
@@ -483,7 +484,7 @@ class DistExecutor:
 
     @property
     def _cdtype(self):
-        return (jnp.complex64 if jnp.dtype(self.plan.d.dtype) == jnp.float32
+        return (jnp.complex64 if jnp.dtype(self.plan.dtype) == jnp.float32
                 else jnp.complex128)
 
     def _forward_call(self):
@@ -542,7 +543,7 @@ class DistExecutor:
         if fn is not None:
             return fn
         ld, ax0 = self._ld, P(self._shard)
-        L = self.plan.d.shape[1]
+        L = self.plan.B
         C = self.plan.gather_m.shape[1]
         cdtype = self._cdtype
 
@@ -766,7 +767,7 @@ def _shim_executor(plan, mesh, axis, **kw):
     the local contraction."""
     if any(v is not None for v in kw.values()):
         return DistExecutor(plan, mesh, axis, **kw)
-    if isinstance(plan.d, jax.core.Tracer):
+    if isinstance(plan.w, jax.core.Tracer):
         return DistExecutor(plan, mesh, axis)
     return dist_executor(plan, mesh, axis)
 

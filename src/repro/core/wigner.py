@@ -28,6 +28,7 @@ __all__ = [
     "wigner_d_table",
     "fundamental_pairs",
     "wigner_d_fundamental",
+    "wigner_window_iter",
     "wigner_window_table",
 ]
 
@@ -242,21 +243,20 @@ def wigner_d_fundamental(B: int, beta: np.ndarray | None = None,
     return table, pairs
 
 
-def wigner_window_table(B: int, lchunk: int,
-                        beta: np.ndarray | None = None
-                        ) -> tuple[np.ndarray, np.ndarray]:
-    """Chunk-boundary recurrence windows on the fundamental domain.
+def wigner_window_iter(B: int, lchunk: int,
+                       beta: np.ndarray | None = None):
+    """Generator of chunk-boundary recurrence windows, O(P * J) state.
 
-    Returns (windows, pairs) with windows of shape (nL, 2, P, J),
-    nL = B/lchunk: windows[c] holds the (d_{l-1}, d_l) three-term-
-    recurrence state at the start of degree l = c*lchunk for every
-    fundamental pair p (zeros where the pair has not activated, i.e.
-    l <= m_p); windows[0] is all zeros.  This is the CHUNKED table
-    emission for the streaming schedules: marching the recurrence with
-    O(P * J) working state and emitting only nL * 2 rows per pair, it
-    never materializes the (P, B, J) dense table -- the float64 numpy
-    oracle that :func:`repro.kernels.streaming.build_windows` (the
-    kernel-dtype jnp twin on the clustered axis) is tested against.
+    Yields nL = B/lchunk arrays of shape (2, P, J): chunk c's
+    (d_{l-1}, d_l) three-term-recurrence state at the start of degree
+    l = c*lchunk for every fundamental pair p (zeros where the pair has
+    not activated, i.e. l <= m_p); chunk 0 is all zeros.  This is the
+    host-side streaming plan oracle: each yield is one window the
+    consumer stages to the device and may drop immediately, so the
+    host's working set stays at three (P, J) panels -- the full (P, B, J)
+    dense table (and even the full (nL, 2, P, J) window stack) never has
+    to exist on the host.  :func:`wigner_window_table` stacks this
+    generator for tests/small B.
     """
     from . import quadrature
 
@@ -274,10 +274,10 @@ def wigner_window_table(B: int, lchunk: int,
         seeds[p] = wigner_seed(int(m[p]), int(mp[p]), beta)
 
     nL = B // lchunk
-    windows = np.zeros((nL, 2, P, J))
     cb = np.cos(beta)[None, :]
     d_prev = np.zeros((P, J))
     d_cur = np.zeros((P, J))
+    yield np.zeros((2, P, J))           # chunk 0 carries no history
     # boundaries past (nL-1)*lchunk are never read; stop the march there.
     for l in range((nL - 1) * lchunk):
         starting = (m == l)
@@ -291,6 +291,25 @@ def wigner_window_table(B: int, lchunk: int,
         d_prev = np.where(active[:, None], d_cur, 0.0)
         d_cur = np.where(active[:, None], d_next, 0.0)
         if (l + 1) % lchunk == 0:
-            windows[(l + 1) // lchunk, 0] = d_prev
-            windows[(l + 1) // lchunk, 1] = d_cur
-    return windows, pairs
+            yield np.stack([d_prev, d_cur])
+
+
+def wigner_window_table(B: int, lchunk: int,
+                        beta: np.ndarray | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Chunk-boundary recurrence windows on the fundamental domain.
+
+    Returns (windows, pairs) with windows of shape (nL, 2, P, J),
+    nL = B/lchunk: the stacked output of :func:`wigner_window_iter`
+    (windows[c] holds the (d_{l-1}, d_l) state at the start of degree
+    l = c*lchunk; windows[0] is all zeros).  This is the CHUNKED table
+    emission for the streaming schedules: marching the recurrence with
+    O(P * J) working state and emitting only nL * 2 rows per pair, it
+    never materializes the (P, B, J) dense table -- the float64 numpy
+    oracle that :func:`repro.kernels.streaming.build_windows` (the
+    kernel-dtype jnp twin on the clustered axis) is tested against.
+    Paper-scale consumers should iterate :func:`wigner_window_iter`
+    directly instead of stacking all nL windows on the host.
+    """
+    windows = np.stack(list(wigner_window_iter(B, lchunk, beta)))
+    return windows, fundamental_pairs(B)

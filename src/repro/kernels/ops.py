@@ -33,6 +33,7 @@ from .runtime import default_interpret
 
 __all__ = ["default_interpret", "make_dwt_fn", "make_idwt_fn",
            "onthefly_inputs", "fused_metadata", "streaming_inputs",
+           "window_source", "host_window_stack",
            "batched_rhs", "pad_lanes", "attention"]
 
 
@@ -85,7 +86,7 @@ def _ragged_metadata(plan: SoftPlan, tk: int, tl: int):
     # kernel output is masked anyway. Sort ascending l_start.
     perm = np.argsort(l_start, kind="stable").astype(np.int32)
     kk, ll, n_dense = dwt_kernels.build_work_list(l_start[perm], tk, tl,
-                                                  plan.d.shape[1])
+                                                  plan.B)
     return perm, l_start, kk, ll, n_dense
 
 
@@ -105,27 +106,83 @@ def fused_metadata(plan: SoftPlan, tk: int):
     return perm, l_start, l0s
 
 
-@functools.lru_cache(maxsize=16)
+def window_source() -> str:
+    """Where streaming_inputs sources its HBM window stack from:
+    "device" (default; streaming.build_windows, the kernel-identical jnp
+    march -- bitwise-consistent with the monolithic fused kernels) or
+    "host" ($REPRO_WINDOW_SOURCE=host; host_window_stack, staged
+    chunk-by-chunk from the O(P*J) host generator)."""
+    import os
+    src = os.environ.get("REPRO_WINDOW_SOURCE", "device")
+    if src not in ("device", "host"):
+        raise ValueError(f"$REPRO_WINDOW_SOURCE must be 'device' or "
+                         f"'host', got {src!r}")
+    return src
+
+
+def host_window_stack(plan: SoftPlan, tk: int, lchunk: int,
+                      precision: str = "fp32"):
+    """HBM window stack (nL, 2, K, J) ingested chunk-by-chunk from the
+    HOST recurrence generator (core.wigner.wigner_window_iter).
+
+    The host working set stays at the generator's O(P*J) recurrence
+    panels plus ONE (2, K, J) staging buffer -- each chunk's window is
+    mapped from fundamental-pair rows to the l-start-sorted padded
+    cluster order (padded rows zero) and shipped to the device before
+    the next chunk is marched.  Numerically equivalent to
+    streaming.build_windows (host f64 march vs device march; allclose,
+    not bitwise), so the default window source stays "device" where
+    bitwise parity with the monolithic fused kernels matters.
+    """
+    perm, _, _ = fused_metadata(plan, min(tk, plan.n_padded))
+    rows = np.full(plan.n_padded, -1, np.int64)
+    rows[: plan.n_clusters] = plan.table.fund_row
+    rows = rows[perm]
+    valid = rows >= 0
+    dt = jnp.bfloat16 if precision == "bf16" else plan.dtype
+    stage = np.zeros((2, plan.n_padded, 2 * plan.B), np.dtype(plan.dtype))
+    chunks = []
+    for win in wigner.wigner_window_iter(plan.B, lchunk):
+        stage[:] = 0.0
+        stage[:, valid, :] = win[:, rows[valid], :]
+        chunks.append(jnp.asarray(stage).astype(dt))
+    return jnp.stack(chunks)
+
+
 def streaming_inputs(plan: SoftPlan, tk: int, lchunk: int, precision: str):
     """Permuted operands + chunk-boundary windows for the streaming
     kernels (kernels/streaming.py), memoized by (plan, tk, lchunk,
-    precision) identity.
+    precision, window_source()) identity.
 
-    The recurrence windows are built ONCE per configuration with the
-    kernel-identical jnp step (streaming.build_windows), on the
+    The recurrence windows are built ONCE per configuration, on the
     l-start-sorted cluster order the fused family launches in; bf16
     precision stores them (and the in-kernel state) as bfloat16.  The
     window table is the streaming schedule's only HBM-resident Wigner
     state: (nL, 2, K, J) -- lchunk/2 x smaller than the dense d-table.
+    The source is the kernel-identical jnp march by default, or the host
+    generator under $REPRO_WINDOW_SOURCE=host (see window_source).
     """
+    return _streaming_inputs(plan, tk, lchunk, precision, window_source())
+
+
+@functools.lru_cache(maxsize=16)
+def _streaming_inputs(plan: SoftPlan, tk: int, lchunk: int, precision: str,
+                      source: str):
+    from repro import obs
+
     seeds, m, mp, cb = onthefly_inputs(plan)
     perm, _, l0s = fused_metadata(plan, tk)
     seeds_p, m_p, mp_p = seeds[perm], m[perm], mp[perm]
-    dt = seeds.dtype
-    sdt = jnp.bfloat16 if precision == "bf16" else dt
-    windows = streaming.build_windows(
-        seeds_p, m_p.astype(dt)[:, None], mp_p.astype(dt)[:, None],
-        cb[None, :], L=plan.B, lchunk=lchunk, state_dtype=sdt)
+    with obs.span("plan.build.window", B=plan.B, lchunk=lchunk,
+                  precision=precision, source=source):
+        if source == "host":
+            windows = host_window_stack(plan, tk, lchunk, precision)
+        else:
+            dt = seeds.dtype
+            sdt = jnp.bfloat16 if precision == "bf16" else dt
+            windows = streaming.build_windows(
+                seeds_p, m_p.astype(dt)[:, None], mp_p.astype(dt)[:, None],
+                cb[None, :], L=plan.B, lchunk=lchunk, state_dtype=sdt)
     return seeds_p, m_p, mp_p, cb, l0s, windows
 
 
@@ -202,15 +259,18 @@ def make_dwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
             return out[inv_perm]
         return _wrap_batch(raw, batch)
     if impl == "dense":
+        plan.require_dense("make_dwt_fn(impl='dense')")
+
         def raw(p: SoftPlan, rhs2):
             return dwt_kernels.dwt_dense(p.d, rhs2, tk=tk, tl=tl, tj=tj,
                                          interpret=interpret)
         return _wrap_batch(raw, batch)
 
     if impl == "ragged":
+        plan.require_dense("make_dwt_fn(impl='ragged')")
         perm, l_start, kk, ll, _ = _ragged_metadata(plan, tk, tl)
         inv_perm = np.argsort(perm)
-        l_grid = np.arange(plan.d.shape[1])
+        l_grid = np.arange(plan.B)
         mask = jnp.asarray((l_grid[None, :] >= l_start[:, None]))  # (K, L)
 
         def raw(p: SoftPlan, rhs2):
@@ -272,6 +332,8 @@ def make_idwt_fn(plan: SoftPlan, impl="dense", *, tk=8, tl=128, tj=512,
             return out[inv_perm]
         return _wrap_batch(raw, batch)
     if impl == "dense":
+        plan.require_dense("make_idwt_fn(impl='dense')")
+
         def raw(p: SoftPlan, lhs2):
             return dwt_kernels.idwt_dense(p.d, lhs2, tk=tk, tl=tl, tj=tj,
                                           interpret=interpret)
@@ -332,7 +394,7 @@ def onthefly_inputs(plan: SoftPlan):
         mm, mmp = plan.table.rep[kidx]
         seeds[kidx] = wigner.wigner_seed(int(mm), int(mmp), beta)
         m[kidx], mp[kidx] = mm, mmp
-    dt = plan.d.dtype
+    dt = plan.dtype
     return (jnp.asarray(seeds, dt), jnp.asarray(m), jnp.asarray(mp),
             jnp.asarray(np.cos(beta), dt))
 

@@ -28,9 +28,14 @@ import sys
 import tempfile
 import time
 
-REQUIRED_SPANS = ("plan.build", "plan.schedule", "autotune.sweep",
-                  "autotune.candidate", "executor.chunk", "service.pack",
-                  "service.launch", "service.refine", "service.request")
+REQUIRED_SPANS = ("plan.build", "plan.build.window", "plan.schedule",
+                  "autotune.sweep", "autotune.candidate", "executor.chunk",
+                  "service.pack", "service.launch", "service.refine",
+                  "service.request")
+
+# monotonic counters --check also requires (plan.host_peak_rss tracks the
+# peak-RSS high-water deltas charged to plan construction)
+REQUIRED_COUNTERS = ("plan.host_peak_rss",)
 
 
 def _emit_rows(rows, out=None):
@@ -86,6 +91,16 @@ def main(argv=None):
     print(f"plan: B={B} V={t.describe()['V']} "
           f"[{t.describe()['source']}]")
 
+    # 1b. streaming plan build: windowed construction (no dense d table)
+    #     emits the plan.build.window span when the kernels stage their
+    #     HBM window stacks, plus the plan.host_peak_rss counter
+    ts = plan_mod.plan(B, dtype=jnp.float64, impl="fused", V=1,
+                       lchunk=max(1, B // 4), streaming=True,
+                       interpret=True)
+    ts.dwt_fn, ts.idwt_fn           # window stacks are built lazily
+    print(f"streaming plan: B={B} lchunk={max(1, B // 4)} "
+          f"d-free={ts.soft_plan.streaming}")
+
     # 2. batched executor traffic: 2V+1 lanes -> 3 chunks, one padded
     rng = np.random.default_rng(args.seed)
     n = 2 * V + 1
@@ -126,11 +141,16 @@ def main(argv=None):
 
     if args.check:
         failures = obs.check_chrome_trace(doc, required_names=REQUIRED_SPANS)
+        counters = rec.counters()
+        for name in REQUIRED_COUNTERS:
+            if name not in counters:
+                failures.append(f"required counter missing: {name}")
         if failures:
             for msg in failures:
                 print("FAIL:", msg)
             raise SystemExit(1)
         print(f"trace check: OK ({len(REQUIRED_SPANS)} required spans, "
+              f"{len(REQUIRED_COUNTERS)} required counters, "
               f"monotonic timestamps)")
     return doc
 

@@ -15,9 +15,10 @@ import types
 
 from .transform import (AUTO_IMPL_CANDIDATES, AUTO_V_CANDIDATES,  # noqa: F401
                         IMPLS, Schedule, Transform, cache_stats,
-                        clear_cache, plan)
+                        clear_cache, dense_table_bytes_limit, plan)
 
 __all__ = ["plan", "Transform", "Schedule", "clear_cache", "cache_stats",
+           "dense_table_bytes_limit",
            "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
 
 

@@ -64,6 +64,7 @@ from repro.core.batched import SoftPlan
 from repro.kernels import autotune, ops
 
 __all__ = ["Transform", "Schedule", "plan", "clear_cache", "cache_stats",
+           "dense_table_bytes_limit",
            "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
 
 # impl="auto" resolves to one of these executor schedules
@@ -182,14 +183,20 @@ def _static_schedule(soft_plan: SoftPlan, impl, V, tk, tl, tj,
     chunk here -- ``Schedule.lchunk``/``vmem_bytes`` describe the kernel
     actually launched, never the monolithic one.
     """
-    K, L, J = soft_plan.d.shape
+    K, L, J = soft_plan.n_padded, soft_plan.B, 2 * soft_plan.B
     K_local = K // n_shards
     C = soft_plan.gather_m.shape[1]
-    itemsize = jnp.dtype(soft_plan.d.dtype).itemsize
+    itemsize = jnp.dtype(soft_plan.dtype).itemsize
     impl = "fused" if impl == "auto" else impl
+    if soft_plan.streaming and impl in ("reference", "dense", "ragged"):
+        raise ValueError(
+            f"impl={impl!r} needs the dense Wigner table, but this "
+            f"B={soft_plan.B} plan was built streaming (d=None); use the "
+            f"recurrence family (impl='fused'/'onthefly') or plan with "
+            f"streaming=False")
     omode = _resolve_overlap(overlap, n_shards)
     prec = autotune.static_precision(soft_plan.B, precision,
-                                     dtype=soft_plan.d.dtype) \
+                                     dtype=soft_plan.dtype) \
         if impl == "fused" and n_shards == 1 else "fp32"
     mono_ok = prec == "fp32"    # bf16 has no monolithic kernel
     if n_shards > 1:    # tiles must divide the per-device cluster count
@@ -272,7 +279,7 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
     its own /O{mode} key) and take the faster.
     """
     prec = autotune.static_precision(soft_plan.B, precision,
-                                     dtype=soft_plan.d.dtype) \
+                                     dtype=soft_plan.dtype) \
         if n_shards == 1 and impl in ("auto", "fused") else "fp32"
     if prec == "bf16" and lchunk is None:
         # bf16 has no monolithic kernel: make_dwt_fn forces the streaming
@@ -305,13 +312,13 @@ def _measured_schedule(soft_plan: SoftPlan, impl, V, limit: int, interpret,
             vmem_limit=limit)["overlap"]
     else:
         omode = _resolve_overlap(overlap, n_shards)
-    K, L, J = soft_plan.d.shape
+    K, L, J = soft_plan.n_padded, soft_plan.B, 2 * soft_plan.B
     C = soft_plan.gather_m.shape[1]
     prec = prec if best_impl == "fused" else "fp32"
     est = autotune.estimate_vmem_bytes(
         best_impl, L=L, J=J, C2=best["V"] * C * 2, tk=best["tk"],
         tl=best["tl"], tj=best["tj"],
-        itemsize=jnp.dtype(soft_plan.d.dtype).itemsize,
+        itemsize=jnp.dtype(soft_plan.dtype).itemsize,
         lchunk=lchunk, precision=prec)
     return Schedule(best_impl, best["V"], best["tk"], best["tl"], best["tj"],
                     "measured", est, limit, n_shards, overlap=omode,
@@ -348,7 +355,7 @@ class Transform:
         self.soft_plan = soft_plan
         self.schedule = schedule
         self.B = soft_plan.B
-        self.dtype = soft_plan.d.dtype
+        self.dtype = soft_plan.dtype
         self.mesh = mesh
         self.axis = axis
         self.n_shards = n_shards
@@ -397,26 +404,47 @@ class Transform:
         streaming engages), and ``est_peak_hbm_bytes`` the estimated
         whole-transform HBM residency (grid + stacks + Wigner working
         set) -- read these BEFORE launching a large B to see which tier
-        would blow up."""
+        would blow up.  ``est_host_plan_bytes`` is the host-tier twin:
+        the peak RSS plan CONSTRUCTION costs (the dense O(B^3) table
+        cliff, or the streaming generator's O(P*J) panels when
+        ``streaming`` is True).  ``precision_bound_extrapolated`` flags
+        -- loudly, with a UserWarning -- a bf16 schedule whose error gate
+        is still an extrapolation rather than an error_table.py
+        measurement."""
         s = self.schedule
-        K, L, J = self.soft_plan.d.shape
-        C = self.soft_plan.gather_m.shape[1]
+        sp = self.soft_plan
+        K, L, J = sp.n_padded, sp.B, 2 * sp.B
+        C = sp.gather_m.shape[1]
         itemsize = jnp.dtype(self.dtype).itemsize
+        extrapolated = (s.precision == "bf16"
+                        and self.B in autotune.PRECISION_BOUND_EXTRAPOLATED)
+        if extrapolated:
+            import warnings
+            warnings.warn(
+                f"bf16 schedule at B={self.B} is gated by an EXTRAPOLATED "
+                f"error bound ({autotune.PRECISION_ERROR_BOUNDS[self.B]:g});"
+                f" run benchmarks/error_table.py at this bandwidth to "
+                f"replace it with a measurement", stacklevel=2)
         out = {
             "B": self.B, "dtype": jnp.dtype(self.dtype).name,
             "impl": s.impl, "V": s.V, "tk": s.tk, "tl": s.tl, "tj": s.tj,
             "tune": self.tune, "source": s.source, "overlap": s.overlap,
             "lchunk": s.lchunk, "precision": s.precision,
+            "precision_bound_extrapolated": extrapolated,
+            "streaming": sp.streaming,
             "vmem_bytes": s.vmem_bytes,
             "vmem_limit": s.vmem_limit, "n_shards": self.n_shards,
-            "n_clusters": self.soft_plan.n_clusters,
-            "n_padded": self.soft_plan.n_padded,
+            "n_clusters": sp.n_clusters,
+            "n_padded": sp.n_padded,
             "est_live_coeff_bytes": autotune.estimate_live_coeff_bytes(
                 tk=s.tk, L=L, C2=s.V * C * 2, itemsize=itemsize,
                 lchunk=s.lchunk),
             "est_peak_hbm_bytes": autotune.estimate_hbm_bytes(
                 s.impl, B=self.B, K=K, L=L, J=J, C2=s.V * C * 2,
                 itemsize=itemsize, lchunk=s.lchunk, precision=s.precision),
+            "est_host_plan_bytes": autotune.estimate_host_plan_bytes(
+                self.B, n_clusters=sp.n_clusters, itemsize=itemsize,
+                streaming=sp.streaming),
         }
         if self.mesh is not None:
             out.update({
@@ -663,10 +691,55 @@ def clear_cache() -> None:
 def cache_stats() -> dict:
     """Planner cache counters.  hits/misses count every lookup;
     mesh_hits/mesh_misses count the mesh-planned subset separately, and
-    mesh_size is how many of the cached Transforms hold a mesh."""
+    mesh_size is how many of the cached Transforms hold a mesh.
+    ``soft_plan_cache`` surfaces the byte-bounded core.batched plan memo
+    (bytes / bytes_limit / evictions; $REPRO_PLAN_CACHE_BYTES)."""
     return dict(_CACHE_STATS, size=len(_CACHE),
                 mesh_size=sum(1 for t in _CACHE.values()
-                              if t.mesh is not None))
+                              if t.mesh is not None),
+                soft_plan_cache=batched.plan_cache_stats())
+
+
+# Dense-table host-footprint threshold (bytes) above which plan() builds
+# streaming-capable configurations without the dense Wigner table.
+_DEF_DENSE_TABLE_BYTES = 512 * 1024 * 1024
+_LAST_PEAK_RSS = 0
+
+
+def dense_table_bytes_limit() -> int:
+    """Auto-streaming threshold; override with $REPRO_PLAN_DENSE_TABLE_BYTES."""
+    return int(os.environ.get("REPRO_PLAN_DENSE_TABLE_BYTES",
+                              _DEF_DENSE_TABLE_BYTES))
+
+
+def _bump_host_peak_rss() -> None:
+    """Advance the monotonic ``plan.host_peak_rss`` obs counter to the
+    process's current peak RSS (bytes).  Sampled after every plan build,
+    so a dense table sneaking back into a streaming path shows up as a
+    counter jump in ``profile_so3 --check`` traces."""
+    global _LAST_PEAK_RSS
+    # Prefer /proc/self/status VmHWM over getrusage: on current kernels a
+    # spawned child inherits the parent's ru_maxrss high-water mark, which
+    # would charge the parent's whole footprint to this counter's first
+    # bump.  VmHWM is reset at exec and reflects only this process.
+    peak = None
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    peak = int(line.split()[1]) * 1024
+                    break
+    except OSError:
+        pass
+    if peak is None:
+        try:
+            import resource
+            peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+        except (ImportError, OSError):      # non-POSIX host
+            return
+    if peak > _LAST_PEAK_RSS:
+        obs.inc("plan.host_peak_rss", peak - _LAST_PEAK_RSS)
+        _LAST_PEAK_RSS = peak
 
 
 def _mesh_key(mesh):
@@ -681,6 +754,7 @@ def _mesh_key(mesh):
 def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
          tk: int | None = None, tl: int | None = None, tj: int | None = None,
          lchunk: int | None = None, precision: str | None = None,
+         streaming: bool | None = None,
          mesh=None, axis=("data", "model"), tune: str | None = None,
          overlap: str | None = None, vmem_budget: int | None = None,
          interpret=None, n_buckets: int = 8,
@@ -693,6 +767,16 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
           monolithic tile cannot fit the VMEM budget at any lane width)
           or an explicit l-chunk (divisor of B) forcing the streaming
           fused schedule (single-shard fused plans only).
+    streaming: build the SoftPlan WITHOUT the dense (K, L, J) Wigner
+          table (core.batched.build_plan(streaming=True)): plan
+          construction never materializes any O(B^3) host array, the
+          grid FFT stages run in beta slabs, and only the recurrence
+          family (fused/onthefly) can execute.  None -- the default --
+          auto-engages it for recurrence-capable non-mesh plans whose
+          dense-table host footprint would exceed
+          $REPRO_PLAN_DENSE_TABLE_BYTES (512 MiB default: B <= 64 keeps
+          the dense build bit-for-bit, paper-scale B streams).  Explicit
+          True/False overrides; True rejects table-dependent impls.
     precision: None (the default: fp32 / plan-dtype storage, bitwise-
           safe -- a default plan never trades accuracy implicitly),
           "auto" (opt-in heuristic: bf16 storage for FLOAT32 plans at
@@ -735,19 +819,32 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
                 "streaming schedules (lchunk/bf16) are not wired into "
                 "the sharded executor yet; plan without a mesh")
         if lchunk is not None:
-            from repro.kernels import streaming
-            lchunk = streaming.check_lchunk(B, lchunk)
+            from repro.kernels import streaming as streaming_kernels
+            lchunk = streaming_kernels.check_lchunk(B, lchunk)
     if overlap is not None:
         parallel.check_overlap_mode(overlap)       # typos before mesh advice
         if overlap != "off" and mesh is None:
             raise ValueError(
                 f"overlap={overlap!r} needs a mesh plan; local batches "
                 "have no collective to pipeline")
+    recurrence_capable = impl in ("auto", "fused", "onthefly") \
+        and mesh is None
+    if streaming is None:
+        dense_bytes = autotune.estimate_host_plan_bytes(
+            B, itemsize=jnp.dtype(dtype).itemsize)
+        streaming = recurrence_capable \
+            and dense_bytes > dense_table_bytes_limit()
+    elif streaming and not recurrence_capable:
+        raise ValueError(
+            f"streaming=True needs a recurrence-family plan (impl in "
+            f"'auto'/'fused'/'onthefly', no mesh); got impl={impl!r}, "
+            f"mesh={'set' if mesh is not None else None}")
     mode = _tune_mode(tune)
     limit = autotune.vmem_limit_bytes() if vmem_budget is None \
         else int(vmem_budget)
     axis = (axis,) if isinstance(axis, str) else tuple(axis)
     key = (B, jnp.dtype(dtype).str, impl, V, tk, tl, tj, lchunk, precision,
+           bool(streaming),
            _mesh_key(mesh), axis if mesh is not None else None, mode,
            overlap, limit, interpret, n_buckets,
            None if tune_cache is None else str(tune_cache))
@@ -765,7 +862,7 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
         _CACHE_STATS["mesh_misses"] += 1
 
     with obs.span("plan.build", B=B, impl=impl, tune=mode,
-                  mesh=mesh is not None):
+                  mesh=mesh is not None, streaming=bool(streaming)):
         base_tk = tk if tk is not None else _DEF_TK
         if mesh is not None:
             n_shards = int(np.prod([mesh.shape[a] for a in axis]))
@@ -791,7 +888,8 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
             parallel.check_mesh_compat(soft_plan, n_shards)
         else:
             n_shards = 1
-            soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk)
+            soft_plan = batched.build_plan(B, dtype=dtype, pad_to=base_tk,
+                                           streaming=bool(streaming))
 
         # mesh plans resolve (tk, tl, tj, V) against the per-device shard:
         # the measured sweep exists only for the fused device-local kernel
@@ -814,6 +912,7 @@ def plan(B: int, dtype=jnp.float64, *, impl: str = "auto", V="auto",
                       axis=axis if mesh is not None else None,
                       n_shards=n_shards, n_buckets=n_buckets,
                       interpret=interpret, tune=mode)
+    _bump_host_peak_rss()
     _CACHE[key] = t
     while len(_CACHE) > _CACHE_MAX:
         _CACHE.popitem(last=False)

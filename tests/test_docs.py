@@ -49,6 +49,28 @@ def test_documented_symbol_resolves(dotted):
     _resolve(dotted)  # raises ImportError / AttributeError on a stale doc
 
 
+def test_streaming_construction_section_covers_api():
+    """The 'Streaming plan construction' subsection must name the d-free
+    build API (each name is then resolved by
+    test_documented_symbol_resolves, so doc and code can't drift)."""
+    syms = set(_documented_symbols())
+    required = {
+        "repro.core.wigner.wigner_window_iter",
+        "repro.core.batched.plan_cache_stats",
+        "repro.core.batched.streamed_rhs",
+        "repro.core.batched.streamed_synthesis",
+        "repro.core.batched.fft_analysis_slab",
+        "repro.core.batched.SoftPlan.require_dense",
+        "repro.kernels.ops.host_window_stack",
+        "repro.kernels.ops.window_source",
+        "repro.kernels.autotune.estimate_host_plan_bytes",
+        "repro.kernels.autotune.PRECISION_BOUND_EXTRAPOLATED",
+        "repro.plan.dense_table_bytes_limit",
+    }
+    missing = sorted(required - syms)
+    assert not missing, f"ARCHITECTURE.md missing streaming symbols: {missing}"
+
+
 def test_observability_section_covers_obs_api():
     """The Observability section must name the repro.obs API (each name
     listed here is then resolved by test_documented_symbol_resolves, so

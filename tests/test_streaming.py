@@ -9,7 +9,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro import plan as plan_mod
-from repro.core import quadrature, soft, wigner
+from repro.core import batched, quadrature, soft, wigner
 from repro.kernels import autotune, ops, streaming
 
 
@@ -228,6 +228,127 @@ def test_describe_reports_streaming_fields_and_live_memory_drop():
                            lchunk=8).describe()
     assert strm["est_peak_hbm_bytes"] > mono["est_peak_hbm_bytes"]
     assert coarse["est_peak_hbm_bytes"] < strm["est_peak_hbm_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# window-built (d-free) plans: bitwise parity with dense-built plans for
+# every recurrence-capable ladder impl, loud guards on dense-only consumers
+# ---------------------------------------------------------------------------
+
+STREAM_LADDER = [
+    pytest.param(dict(impl="fused", dtype=jnp.float64), id="fused"),
+    pytest.param(dict(impl="fused", dtype=jnp.float64, lchunk=2),
+                 id="fused-lchunk"),
+    pytest.param(dict(impl="fused", dtype=jnp.float32, lchunk=2,
+                      precision="bf16"), id="fused-bf16"),
+    pytest.param(dict(impl="onthefly", dtype=jnp.float64), id="onthefly"),
+]
+
+
+@pytest.mark.parametrize("B", [4, 8, 16])
+@pytest.mark.parametrize("cfg", STREAM_LADDER)
+def test_window_built_plan_bitwise_equals_dense_built(B, cfg):
+    """streaming=True builds the plan without ever materializing the
+    dense (K, L, J) d table -- and the result must be bitwise-identical
+    to the dense-built plan under every recurrence-capable kernel,
+    forward AND inverse (the PR's core acceptance criterion)."""
+    kw = dict(cfg)
+    dtype = kw.pop("dtype")
+    td = plan_mod.plan(B, dtype=dtype, V=1, tk=4, **kw)
+    ts = plan_mod.plan(B, dtype=dtype, V=1, tk=4, streaming=True, **kw)
+    assert not td.soft_plan.streaming and td.soft_plan.d is not None
+    assert ts.soft_plan.streaming and ts.soft_plan.d is None
+    assert ts.soft_plan.dtype == td.soft_plan.dtype
+    cd = np.complex64 if dtype == jnp.float32 else np.complex128
+    fhat = soft.random_coeffs(B, seed=B).astype(cd)
+    f = np.asarray(td.inverse(fhat))
+    np.testing.assert_array_equal(np.asarray(ts.inverse(fhat)), f)
+    np.testing.assert_array_equal(np.asarray(ts.forward(jnp.asarray(f))),
+                                  np.asarray(td.forward(jnp.asarray(f))))
+
+
+def test_streaming_plan_cache_and_soft_plan_identity():
+    a = plan_mod.plan(8, impl="fused", V=2, tk=4, streaming=True)
+    assert a is plan_mod.plan(8, impl="fused", V=2, tk=4, streaming=True)
+    d = plan_mod.plan(8, impl="fused", V=2, tk=4)
+    assert a is not d                       # streaming keys its own entry
+    assert a.describe()["streaming"] and not d.describe()["streaming"]
+    # the d-free SoftPlan rides the same byte-bounded cache
+    assert batched.build_plan(8, dtype=jnp.float64, pad_to=4,
+                              streaming=True) is a.soft_plan
+    assert batched.build_plan(8, dtype=jnp.float64, pad_to=4) is d.soft_plan
+
+
+def test_window_built_plan_padded_permuted_order():
+    """Padding + an explicit cluster permutation flow through the d-free
+    build identically to the dense build (bitwise, fwd + inv)."""
+    B, K = 8, 8 * 9 // 2
+    order = np.random.default_rng(1).permutation(K)
+    pd = batched.build_plan(B, dtype=jnp.float64, pad_to=8, order=order)
+    ps = batched.build_plan(B, dtype=jnp.float64, pad_to=8, order=order,
+                            streaming=True)
+    assert ps is not pd and ps.streaming
+    np.testing.assert_array_equal(np.asarray(ps.gather_m),
+                                  np.asarray(pd.gather_m))
+    fhat = jnp.asarray(soft.random_coeffs(B, seed=11))
+    f_d = np.asarray(batched.inverse_clustered(
+        pd, fhat, idwt_fn=ops.make_idwt_fn(pd, "fused", tk=4)))
+    f_s = np.asarray(batched.inverse_clustered(
+        ps, fhat, idwt_fn=ops.make_idwt_fn(ps, "fused", tk=4)))
+    np.testing.assert_array_equal(f_s, f_d)
+    b_d = np.asarray(batched.forward_clustered(
+        pd, jnp.asarray(f_d), dwt_fn=ops.make_dwt_fn(pd, "fused", tk=4)))
+    b_s = np.asarray(batched.forward_clustered(
+        ps, jnp.asarray(f_s), dwt_fn=ops.make_dwt_fn(ps, "fused", tk=4)))
+    np.testing.assert_array_equal(b_s, b_d)
+
+
+def test_streaming_plan_rejects_dense_only_consumers():
+    sp = batched.build_plan(8, dtype=jnp.float64, pad_to=4, streaming=True)
+    for consumer in (lambda: ops.make_dwt_fn(sp, "dense", tk=4),
+                     lambda: ops.make_dwt_fn(sp, "ragged", tk=4),
+                     lambda: ops.make_idwt_fn(sp, "dense", tk=4),
+                     lambda: batched.dwt_apply(sp, jnp.zeros(())),
+                     lambda: batched.idwt_apply(sp, jnp.zeros(())),
+                     lambda: batched.make_bucketed_dwt_fn(sp)):
+        with pytest.raises(ValueError, match="streaming"):
+            consumer()
+    with pytest.raises(ValueError, match="streaming"):
+        plan_mod.plan(8, impl="reference", streaming=True)
+    with pytest.raises(ValueError, match="streaming"):
+        plan_mod.plan(8, impl="dense", streaming=True)
+
+
+def test_host_window_stack_matches_device_windows(monkeypatch):
+    """The host-generator loader (O(P*J) working set, one staging buffer)
+    agrees with the default device march to f64 roundoff, and
+    $REPRO_WINDOW_SOURCE=host routes streaming_inputs through it."""
+    sp = batched.build_plan(16, dtype=jnp.float64, pad_to=4, streaming=True)
+    tk, lchunk = 4, 4
+    dev = ops.streaming_inputs(sp, tk, lchunk, "fp32")[-1]
+    host = ops.host_window_stack(sp, tk, lchunk)
+    assert host.shape == dev.shape == (16 // lchunk, 2, sp.n_padded, 32)
+    np.testing.assert_allclose(np.asarray(host), np.asarray(dev),
+                               atol=1e-12)
+    monkeypatch.setenv("REPRO_WINDOW_SOURCE", "host")
+    assert ops.window_source() == "host"
+    via_env = ops.streaming_inputs(sp, tk, lchunk, "fp32")[-1]
+    np.testing.assert_array_equal(np.asarray(via_env), np.asarray(host))
+    monkeypatch.setenv("REPRO_WINDOW_SOURCE", "banana")
+    with pytest.raises(ValueError, match="REPRO_WINDOW_SOURCE"):
+        ops.window_source()
+
+
+def test_wigner_window_iter_matches_table():
+    """The constant-memory generator and the stacked table are the same
+    march -- bitwise, chunk for chunk."""
+    for B, lchunk in ((8, 2), (16, 4)):
+        win, pairs = wigner.wigner_window_table(B, lchunk)
+        chunks = list(wigner.wigner_window_iter(B, lchunk))
+        assert len(chunks) == B // lchunk
+        np.testing.assert_array_equal(np.stack(chunks), win)
+        assert chunks[0].shape == (2, len(pairs), 2 * B)
+        assert not chunks[0].any()           # chunk 0 carries no history
 
 
 def test_static_schedule_auto_engages_streaming_under_tight_budget():
