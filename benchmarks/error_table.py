@@ -109,6 +109,22 @@ def precision_rows(bandwidths=(16, 32), fast=False, **plan_kw):
             violations.append(
                 f"B={B}: bf16 rel err {max(fwd_rel, inv_rel):.2e} exceeds "
                 f"PRECISION_ERROR_BOUNDS gate {bound:.2e}")
+        # fp32 roundtrip against its own accuracy-regression gate (the
+        # in-kernel f32 Wigner drift -- see autotune.FP32_ROUNDTRIP_BOUNDS)
+        rt_bound = autotune.FP32_ROUNDTRIP_BOUNDS.get(B)
+        if rt_bound is not None:
+            back = np.asarray(t32.forward(t32.inverse(fhat)))
+            mask = soft.coeff_mask(B)
+            err = np.abs(back - np.asarray(fhat))[mask]
+            ref = np.abs(np.asarray(fhat))[mask]
+            rt_rel = float((err / np.maximum(ref, 1e-300)).max())
+            rows.append({"B": B, "precision": "fp32", "lchunk": lchunk,
+                         "streaming": bool(t32.describe()["streaming"]),
+                         "roundtrip_rel_err": rt_rel, "bound": rt_bound})
+            if rt_rel > rt_bound:
+                violations.append(
+                    f"B={B}: fp32 roundtrip rel err {rt_rel:.2e} exceeds "
+                    f"FP32_ROUNDTRIP_BOUNDS gate {rt_bound:.2e}")
     if violations:
         for v in violations:
             print("FAIL:", v)
@@ -125,6 +141,12 @@ def _print_precision(prows):
     print("B,precision,lchunk,streaming,fwd_rel_err,inv_rel_err,bound,"
           "bound_status")
     for r in prows:
+        if r["precision"] == "fp32":
+            # fp32 roundtrip row: one error, gated by FP32_ROUNDTRIP_BOUNDS
+            print(f"{r['B']},fp32,{r['lchunk']},{r['streaming']},"
+                  f"{r['roundtrip_rel_err']:.2e},roundtrip,"
+                  f"{r['bound']:.2e},measured")
+            continue
         status = "EXTRAPOLATED" if r["bound_extrapolated"] else "measured"
         print(f"{r['B']},{r['precision']},{r['lchunk']},"
               f"{r['streaming']},{r['fwd_rel_err']:.2e},"

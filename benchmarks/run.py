@@ -87,8 +87,8 @@ def lm_step(fast=False):
 
 
 SECTIONS = ("error_table", "workbalance", "soft_runtime", "kernel_schedule",
-            "dwt_schedules", "plan", "distributed", "correlation", "lm_step",
-            "roofline", "paper_scale")
+            "dwt_schedules", "plan", "distributed", "correlation",
+            "serve_mixed", "lm_step", "roofline", "paper_scale")
 
 
 def main() -> None:
@@ -137,6 +137,9 @@ def main() -> None:
         elif name == "correlation":
             from benchmarks import correlation
             rows = correlation.main(fast=args.fast)
+        elif name == "serve_mixed":
+            from benchmarks import serve_load
+            rows = serve_load.main(fast=args.fast)
         elif name == "lm_step":
             rows = lm_step(fast=args.fast)
         elif name == "roofline":

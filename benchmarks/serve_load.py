@@ -1,0 +1,328 @@
+"""Open-loop load + verification harness for the SO3Service serving tier.
+
+Two jobs in one program:
+
+  * **benchmark** -- drive the continuous-batching service with an
+    open-loop Poisson arrival process over a mixed-bandwidth request
+    distribution and measure what a serving tier is judged on: goodput
+    under overload, harness-side latency quantiles (p50/p95/p99, from
+    submit to Future resolution -- the client's clock, not the
+    service's), lane occupancy, and shed counts.  Offered load is
+    self-calibrating: capacity is first measured closed-loop on this
+    machine, then each run offers ``factor x capacity`` requests/s, so
+    the same invocation means the same thing on a laptop and in CI.
+  * **correctness oracle** -- every submitted request must resolve
+    EXACTLY once (a MatchResult or a typed ServiceError; a Future that
+    never settles is a hard failure, not a timeout statistic), the
+    service's typed-outcome ledger must balance against the harness's
+    own tally, and every completed result must be BITWISE-equal
+    (:func:`repro.so3.result_key`) to direct unbatched execution of the
+    same pair through ``plan(B)``'s engine -- continuous batching must
+    not perturb a single ulp.  A fraction of requests is submitted with
+    an already-expired deadline to deterministically exercise the
+    :class:`Expired` path (those are excluded from the parity/latency
+    accounting).
+
+Any violation is a hard failure (SystemExit 1): CI runs this as both the
+perf artifact and the serving-tier smoke.
+
+Rows land in ``BENCH_serve_mixed.json`` via the shared
+:mod:`benchmarks.emit` schema (sha-tagged, schema-loss-guarded against
+the committed baseline with ``--check-against``).
+
+    PYTHONPATH=src python benchmarks/serve_load.py --fast \
+        --out /tmp/BENCH_serve_mixed.json --check-against BENCH_serve_mixed.json
+
+``tests/progs/serve_smoke.py`` drives :func:`run` on a 2-fake-device
+mesh (the sharded lane-packed launch path stays bitwise too).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import wait as futures_wait
+
+import numpy as np
+
+SECTION = "serve_mixed"
+
+# requests per bandwidth in the precomputed pool; every arrival draws a
+# (B, pool-index) pair, so references are computed once per pool entry
+POOL = 4
+# every FORCE_EVERY-th arrival carries an already-expired deadline: the
+# deterministic Expired-path probe (deadline <= now at submit means the
+# scheduler can never pop it into a launch -- see _pop_group_locked)
+FORCE_EVERY = 10
+
+
+def _build_pool(bandwidths, tk, seed):
+    """Per-bandwidth request pool + bitwise reference results.
+
+    References run through an UNBATCHED (lane_width=1, unsharded) engine
+    on the same memoized plan family: the probe the ISSUE's oracle names
+    as 'direct plan(B).correlate execution'.  Lane packing and mesh
+    sharding are both verified not to move a single bit against this.
+    """
+    from repro.core import soft
+    from repro.so3 import CorrelationEngine, result_key, s2
+    from repro.so3.correlate import random_rotation
+
+    pool, refs = {}, {}
+    for B in bandwidths:
+        ref_eng = CorrelationEngine(B, lane_width=1, tk=tk)
+        pool[B], refs[B] = [], []
+        for i in range(POOL):
+            s = seed + 1000 * B + i
+            g = soft.random_s2_coeffs(B, seed=s)
+            f = s2.rotate_s2_coeffs(g, random_rotation(s))
+            pool[B].append((f, g))
+            refs[B].append(result_key(ref_eng.match(f, g, refine=False)))
+    return pool, refs
+
+
+def _new_service(bandwidths, *, lane_width, tk, mesh, axis, max_queue,
+                 deadline_s):
+    from repro.so3 import SO3Service
+    kw = {} if mesh is None else {"mesh": mesh, "axis": axis}
+    svc = SO3Service(bandwidths=bandwidths, lane_width=lane_width, tk=tk,
+                     max_queue=max_queue, deadline_s=deadline_s,
+                     max_retries=1, **kw)
+    svc.warmup()
+    return svc
+
+
+def _calibrate(bandwidths, pool, *, lane_width, tk, mesh, axis,
+               n=24) -> float:
+    """Closed-loop capacity (requests/s): submit n mixed-B requests,
+    drain, divide.  This is the yardstick the open-loop runs scale.
+
+    Two passes, first discarded: the first packed drain through a fresh
+    process still pays one-time dispatch/conversion warmth that no
+    steady-state request sees, and an offered rate scaled off a cold
+    measurement understates real overload by 2-4x."""
+    svc = _new_service(bandwidths, lane_width=lane_width, tk=tk, mesh=mesh,
+                       axis=axis, max_queue=None, deadline_s=None)
+    try:
+        for measured in (False, True):
+            t0 = time.perf_counter()
+            futs = []
+            for i in range(n):
+                B = bandwidths[i % len(bandwidths)]
+                f, g = pool[B][i % POOL]
+                futs.append(svc.submit(f, g, refine=False))
+            svc.drain()
+            wall = time.perf_counter() - t0
+            assert all(fu.done() for fu in futs)
+        return n / wall
+    finally:
+        svc.close(drain=False)
+
+
+def _drive_open_loop(svc, bandwidths, pool, *, rate, n_arrivals, rng):
+    """Poisson arrivals at ``rate`` req/s against the background worker.
+    Returns the harness-side request records (jobs) and the wall time of
+    the arrival window."""
+    svc.start()
+    jobs = []
+    t0 = time.perf_counter()
+    t_next = t0
+    for i in range(n_arrivals):
+        t_next += rng.exponential(1.0 / rate)
+        lag = t_next - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        B = int(rng.choice(bandwidths))
+        idx = int(rng.integers(0, POOL))
+        f, g = pool[B][idx]
+        forced = (i % FORCE_EVERY) == FORCE_EVERY - 1
+        rec = {"B": B, "idx": idx, "forced": forced,
+               "t_submit": time.perf_counter(), "t_done": None}
+        fut = svc.submit(f, g, refine=False,
+                         deadline_s=0.0 if forced else None)
+        # harness-side completion clock: the client's view of latency
+        fut.add_done_callback(
+            lambda _fu, r=rec: r.__setitem__("t_done", time.perf_counter()))
+        rec["future"] = fut
+        jobs.append(rec)
+    futures_wait([r["future"] for r in jobs], timeout=120)
+    wall = time.perf_counter() - t0
+    svc.close(drain=True)
+    return jobs, wall
+
+
+def run(bandwidths=(4, 8), *, fast=False, overload_factors=(0.5, 2.0),
+        lane_width=2, tk=4, mesh=None, axis=("data",), seed=0,
+        duration_s=None, max_queue=16, deadline_s=0.75):
+    """Calibrate capacity, then one open-loop run per overload factor.
+
+    Returns benchmark rows; raises SystemExit(1) on any oracle violation
+    (unresolved Future, ledger imbalance, bitwise parity break, missing
+    shed under overload)."""
+    from repro.so3 import Expired, Rejected, ServiceError, result_key
+
+    bandwidths = tuple(bandwidths)
+    if duration_s is None:
+        duration_s = 2.0 if fast else 6.0
+    pool, refs = _build_pool(bandwidths, tk, seed)
+    capacity = _calibrate(bandwidths, pool, lane_width=lane_width, tk=tk,
+                          mesh=mesh, axis=axis)
+    print(f"# capacity (closed-loop, B={list(bandwidths)}): "
+          f"{capacity:.1f} req/s")
+
+    rows, failures = [], []
+    for factor in overload_factors:
+        rate = max(factor * capacity, 1.0)
+        n_arrivals = int(min(max(rate * duration_s, 20),
+                             300 if fast else 1500))
+        rng = np.random.default_rng(seed + int(factor * 1000))
+        svc = _new_service(bandwidths, lane_width=lane_width, tk=tk,
+                           mesh=mesh, axis=axis, max_queue=max_queue,
+                           deadline_s=deadline_s)
+        jobs, wall = _drive_open_loop(svc, bandwidths, pool, rate=rate,
+                                      n_arrivals=n_arrivals, rng=rng)
+        st = svc.stats()
+
+        # -- oracle 1: exactly-once -- every Future settled, and the
+        # harness tally of typed outcomes balances the service ledger
+        pending = [r for r in jobs if not r["future"].done()]
+        if pending:
+            failures.append(f"factor {factor}: {len(pending)} futures "
+                            f"never resolved (exactly-once violated)")
+        tally = {"completed": 0, "rejected": 0, "expired": 0, "failed": 0}
+        completed, forced_bad = [], []
+        for r in jobs:
+            fu = r["future"]
+            if not fu.done():
+                continue
+            exc = fu.exception()
+            if exc is None:
+                tally["completed"] += 1
+                completed.append(r)
+                if r["forced"]:
+                    forced_bad.append(r)
+            elif isinstance(exc, ServiceError):
+                kind = type(exc).__name__.lower()
+                tally[kind] = tally.get(kind, 0) + 1
+                # an already-expired deadline must shed, but under
+                # overload admission may reject it before the deadline
+                # is ever consulted -- either typed shed is correct
+                if r["forced"] and not isinstance(exc, (Expired, Rejected)):
+                    forced_bad.append(r)
+            else:
+                tally["failed"] += 1
+        if st["submitted"] != st["resolved"]:
+            failures.append(f"factor {factor}: ledger imbalance "
+                            f"submitted={st['submitted']} != "
+                            f"resolved={st['resolved']}")
+        for kind in ("completed", "rejected", "expired", "failed"):
+            if tally[kind] != st[kind]:
+                failures.append(
+                    f"factor {factor}: harness counted {tally[kind]} "
+                    f"{kind} but service ledger says {st[kind]}")
+        if forced_bad:
+            failures.append(f"factor {factor}: {len(forced_bad)} forced-"
+                            f"expiry probes resolved as neither Expired "
+                            f"nor Rejected")
+        if st["expired"] == 0:
+            failures.append(f"factor {factor}: Expired path never "
+                            f"exercised (forced probes should expire "
+                            f"whenever admission lets them through)")
+
+        # -- oracle 2: bitwise parity of every completed result against
+        # direct unbatched execution of the same pooled pair
+        mismatches = 0
+        for r in completed:
+            if r["forced"]:
+                continue
+            got = result_key(r["future"].result())
+            if got != refs[r["B"]][r["idx"]]:
+                mismatches += 1
+        if mismatches:
+            failures.append(f"factor {factor}: {mismatches} completed "
+                            f"results differ bitwise from direct execution")
+
+        # -- oracle 3: overload must shed (bounded queue + deadlines);
+        # forced probes shed by construction, so demand more than those
+        forced_n = sum(1 for r in jobs if r["forced"])
+        if factor >= 1.5 and st["shed"] <= forced_n:
+            failures.append(f"factor {factor}: no organic shedding under "
+                            f"overload (shed={st['shed']}, "
+                            f"forced={forced_n})")
+
+        lat_ms = sorted((r["t_done"] - r["t_submit"]) * 1e3
+                        for r in completed if not r["forced"]
+                        and r["t_done"] is not None)
+        pct = (lambda q: float(np.percentile(lat_ms, q))) if lat_ms \
+            else (lambda q: 0.0)
+        goodput = len([r for r in completed if not r["forced"]]) / wall
+        row = {
+            "bandwidths": list(bandwidths), "factor": factor,
+            "capacity_rps": capacity, "offered_rps": rate,
+            "duration_s": wall, "submitted": st["submitted"],
+            "completed": st["completed"], "rejected": st["rejected"],
+            "expired": st["expired"], "failed": st["failed"],
+            "shed": st["shed"], "forced_expired": forced_n,
+            "retries": st["retries"], "goodput_rps": goodput,
+            "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+            "occupancy": st["occupancy"], "launches": st["launches"],
+            "lane_width": lane_width,
+            "mesh_devices": 0 if mesh is None else mesh.devices.size,
+        }
+        rows.append(row)
+        print(f"factor {factor}: offered {rate:.1f} rps -> goodput "
+              f"{goodput:.1f} rps, p95 {row['p95_ms']:.1f} ms, shed "
+              f"{st['shed']} ({forced_n} forced), occupancy "
+              f"{st['occupancy']:.2f}")
+
+    if failures:
+        for msg in failures:
+            print("FAIL:", msg)
+        raise SystemExit(1)
+    return rows
+
+
+def main(fast=False, **kw):
+    """benchmarks/run.py section entry: rows only, emission handled by
+    the driver's --emit-root-json path (section name: serve_mixed)."""
+    return run(fast=fast, **kw)
+
+
+def _cli():
+    import argparse
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from benchmarks import emit
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--factors", type=float, nargs="+", default=[0.5, 2.0])
+    ap.add_argument("--bandwidths", type=int, nargs="+", default=[4, 8])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: BENCH_serve_mixed.json "
+                         "at the repo root)")
+    ap.add_argument("--check-against", default=None, metavar="BASELINE",
+                    help="schema-loss guard against a committed baseline "
+                         "(hard failure on loss)")
+    args = ap.parse_args()
+
+    rows = run(bandwidths=tuple(args.bandwidths), fast=args.fast,
+               overload_factors=tuple(args.factors), seed=args.seed)
+    if args.check_against:
+        problems = emit.check_schema(rows, args.check_against)
+        if problems:
+            for p in problems:
+                print("FAIL:", p)
+            raise SystemExit(1)
+    path = emit.emit_root_json(SECTION, rows, args.out)
+    print(f"-> {path}")
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root / "src"))
+    sys.path.insert(0, str(root))
+    _cli()

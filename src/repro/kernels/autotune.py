@@ -45,7 +45,7 @@ __all__ = ["autotune_dwt", "autotune_overlap", "static_overlap",
            "estimate_vmem_bytes", "estimate_hbm_bytes",
            "estimate_live_coeff_bytes", "estimate_host_plan_bytes",
            "vmem_limit_bytes", "PRECISIONS", "PRECISION_ERROR_BOUNDS",
-           "PRECISION_BOUND_EXTRAPOLATED"]
+           "PRECISION_BOUND_EXTRAPOLATED", "FP32_ROUNDTRIP_BOUNDS"]
 
 _DEF_CACHE = "~/.cache/repro/autotune.json"
 
@@ -88,6 +88,25 @@ PRECISION_ERROR_BOUNDS = {
 # schedule leans on one of these; benchmarks/error_table.py shrinks this
 # set as streaming plans make larger measurements feasible.
 PRECISION_BOUND_EXTRAPOLATED = frozenset({256, 512})
+
+# Measured max RELATIVE roundtrip error (forward(inverse(fhat)) vs fhat
+# over the valid-coefficient mask, worst seed) of the FP32 fused plan per
+# bandwidth, with ~4x headroom.  This is the accuracy-regression guard
+# for the in-kernel f32 Wigner recurrence drift at the top of the band
+# (~2.2e-3 in d by l = 127 at B = 128 -- ROADMAP's fp32 accuracy cliff):
+# tests/test_streaming.py and benchmarks/error_table.py measure the
+# roundtrip against these gates, so a recurrence/seed change that worsens
+# the drift fails loudly instead of silently degrading f32 serving.
+# B <= 64 measured on this host (worst of 3 seeds: 7.3e-6 / 1.9e-5 /
+# 1.5e-3 / 1.3e-3); B = 128 carries the ~0.13 streaming-plan measurement
+# recorded in ROADMAP.md.
+FP32_ROUNDTRIP_BOUNDS = {
+    8: 3e-5,
+    16: 8e-5,
+    32: 6e-3,
+    64: 6e-3,
+    128: 4e-1,
+}
 
 
 def vmem_limit_bytes() -> int:

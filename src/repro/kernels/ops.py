@@ -145,7 +145,9 @@ def host_window_stack(plan: SoftPlan, tk: int, lchunk: int,
     for win in wigner.wigner_window_iter(plan.B, lchunk):
         stage[:] = 0.0
         stage[:, valid, :] = win[:, rows[valid], :]
-        chunks.append(jnp.asarray(stage).astype(dt))
+        # snapshot the staging buffer: jnp.asarray may alias a host numpy
+        # buffer zero-copy on CPU, and stage is rewritten next chunk
+        chunks.append(jnp.asarray(stage.copy()).astype(dt))
     return jnp.stack(chunks)
 
 

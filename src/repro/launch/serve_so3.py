@@ -34,6 +34,14 @@ def main(argv=None):
     ap.add_argument("--threaded", action="store_true",
                     help="background worker + jittered arrivals instead of "
                          "submit-all + drain")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission bound on total queued requests; over "
+                         "it submits resolve with a typed Rejected error "
+                         "(0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request queue-wait deadline; requests still "
+                         "queued past it resolve with a typed Expired "
+                         "error (0 = no deadline)")
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="shard the engines over the first N devices "
                          "(lane-packed sharded inverse; 0 = local plans; "
@@ -46,7 +54,7 @@ def main(argv=None):
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
     from repro.core import soft
-    from repro.so3 import SO3Service, angle_error, s2
+    from repro.so3 import SO3Service, ServiceError, angle_error, s2
     from repro.so3.correlate import random_rotation
 
     mesh = None
@@ -66,7 +74,9 @@ def main(argv=None):
     svc = SO3Service(bandwidths=args.bandwidth, dtype=jnp.float64,
                      lane_width=lane_width, tk=args.tk,
                      max_wait_ms=args.max_wait_ms, mesh=mesh,
-                     axis=("data",))
+                     axis=("data",),
+                     max_queue=args.max_queue or None,
+                     deadline_s=args.deadline_ms / 1e3 or None)
     warm = svc.warmup()
     for B, s in warm.items():
         eng = svc.engine(B)
@@ -95,11 +105,17 @@ def main(argv=None):
         svc.stop(drain=True)
     else:
         svc.drain()
-    results = [fut.result(timeout=120) for fut in futures]
+    results, shed = [], []
+    for (B, true, _, _), fut in zip(jobs, futures):
+        try:
+            results.append(((B, true), fut.result(timeout=120)))
+        except ServiceError as e:
+            # admission/deadline shed: a typed resolution, not a failure
+            shed.append((B, type(e).__name__, e.reason))
     wall = time.perf_counter() - t0
 
     worst = 0.0
-    for (B, true, _, _), res in zip(jobs, results):
+    for (B, true), res in results:
         errs = (angle_error(res.alpha, true[0]),
                 angle_error(res.beta, true[1]),
                 angle_error(res.gamma, true[2]))
@@ -113,6 +129,11 @@ def main(argv=None):
           f"({st['completed'] / wall:.1f} req/s)")
     print(f"launches: {st['launches']}  packed transforms: "
           f"{st['transforms']}  lane occupancy: {st['occupancy']:.2f}")
+    if st["shed"] or st["retries"]:
+        print(f"shed: {st['shed']} (rejected {st['rejected']}, expired "
+              f"{st['expired']})  retries: {st['retries']}")
+        for B, kind, reason in shed[:5]:
+            print(f"  {kind} at B={B}: {reason}")
     if lat:
         print(f"latency  mean {lat['mean'] * 1e3:.1f} ms  "
               f"p50 {lat['p50'] * 1e3:.1f} ms  p95 {lat['p95'] * 1e3:.1f} ms")

@@ -54,8 +54,8 @@ import pathlib
 import threading
 import time
 
-__all__ = ["Recorder", "span", "add_span", "inc", "observe", "time_fn",
-           "get_recorder", "set_recorder", "device_annotation",
+__all__ = ["Recorder", "span", "add_span", "inc", "observe", "counter",
+           "time_fn", "get_recorder", "set_recorder", "device_annotation",
            "check_chrome_trace"]
 
 # env flag: wrap instrumented dispatch sites in jax.profiler.TraceAnnotation
@@ -135,6 +135,14 @@ class Recorder:
     def counters(self) -> dict:
         with self._lock:
             return dict(self._counters)
+
+    def counter(self, name: str) -> int:
+        """One counter's current value (0 if never incremented) -- the
+        monotonicity hook: the serving-tier tests snapshot
+        ``service.*`` counters through this between rounds and assert
+        they never move backwards."""
+        with self._lock:
+            return int(self._counters.get(name, 0))
 
     def events(self) -> list[dict]:
         """Snapshot of the ring-buffered events, sorted by begin time."""
@@ -276,6 +284,10 @@ def inc(name: str, n: int = 1) -> None:
 
 def observe(name: str, value: float) -> None:
     get_recorder().observe(name, value)
+
+
+def counter(name: str) -> int:
+    return get_recorder().counter(name)
 
 
 def device_annotation(name: str):

@@ -15,10 +15,11 @@ import types
 
 from .transform import (AUTO_IMPL_CANDIDATES, AUTO_V_CANDIDATES,  # noqa: F401
                         IMPLS, Schedule, Transform, cache_stats,
-                        clear_cache, dense_table_bytes_limit, plan)
+                        clear_cache, dense_table_bytes_limit, plan,
+                        warm_bandwidths)
 
 __all__ = ["plan", "Transform", "Schedule", "clear_cache", "cache_stats",
-           "dense_table_bytes_limit",
+           "dense_table_bytes_limit", "warm_bandwidths",
            "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
 
 

@@ -64,7 +64,7 @@ from repro.core.batched import SoftPlan
 from repro.kernels import autotune, ops
 
 __all__ = ["Transform", "Schedule", "plan", "clear_cache", "cache_stats",
-           "dense_table_bytes_limit",
+           "dense_table_bytes_limit", "warm_bandwidths",
            "IMPLS", "AUTO_IMPL_CANDIDATES", "AUTO_V_CANDIDATES"]
 
 # impl="auto" resolves to one of these executor schedules
@@ -686,6 +686,21 @@ def clear_cache() -> None:
     _CACHE.clear()
     for k in _CACHE_STATS:
         _CACHE_STATS[k] = 0
+
+
+def warm_bandwidths() -> dict[int, int]:
+    """{B: count of memoized Transforms at that bandwidth} -- the
+    plan-cache-aware scheduling hook for the serving tier.
+
+    A continuous-batching scheduler (``repro.so3.SO3Service``) uses this
+    to prefer dispatching bandwidths whose plans are already WARM (a
+    cached Transform exists: SoftPlan, Wigner resources, and compiled
+    kernels are all built) over cold ones that would stall a lane behind
+    a plan construction + kernel compile."""
+    out: dict[int, int] = {}
+    for t in _CACHE.values():
+        out[t.B] = out.get(t.B, 0) + 1
+    return out
 
 
 def cache_stats() -> dict:

@@ -61,8 +61,10 @@ callers batch via :meth:`CorrelationEngine.match_batch` directly.
 """
 from . import correlate, s2, service  # noqa: F401
 from .correlate import (CorrelationEngine, MatchResult, angle_error,  # noqa: F401
-                        correlate as match_pair)
-from .service import SO3Service  # noqa: F401
+                        correlate as match_pair, result_key)
+from .service import (Cancelled, Expired, Rejected, ServiceError,  # noqa: F401
+                      SO3Service)
 
 __all__ = ["s2", "correlate", "service", "CorrelationEngine", "MatchResult",
-           "match_pair", "angle_error", "SO3Service"]
+           "match_pair", "angle_error", "result_key", "SO3Service",
+           "ServiceError", "Rejected", "Expired", "Cancelled"]

@@ -44,7 +44,21 @@ from repro.core import quadrature, soft
 from . import s2
 
 __all__ = ["MatchResult", "CorrelationEngine", "correlate", "angle_error",
-           "random_rotation"]
+           "random_rotation", "result_key"]
+
+
+def result_key(res: "MatchResult") -> tuple:
+    """Bitwise-comparable fingerprint of a MatchResult: the grid argmax
+    plus the exact float bit patterns of the refined angles, peak, and
+    score.  Two results are the same computation iff their keys are
+    equal -- the serving tier's parity oracle (benchmarks/serve_load.py)
+    and the mixed-bandwidth fuzz tests compare batched-lane results
+    against direct unbatched execution with this, so a lane packing that
+    perturbs even the last ulp of any field is caught."""
+    def bits(x):
+        return None if x is None else float(x).hex()
+    return (res.index, bits(res.alpha), bits(res.beta), bits(res.gamma),
+            bits(res.peak), bits(res.score))
 
 
 def angle_error(est: float, true: float) -> float:

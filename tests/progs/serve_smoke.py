@@ -1,0 +1,57 @@
+"""Subprocess program: the serving tier on a 2-fake-device mesh.
+
+Drives the open-loop load/verification harness (benchmarks/serve_load.py)
+with the SO3Service planning SHARDED lane-packed launches on a 2-device
+mesh -- every packed group runs the cluster-sharded inverse -- at an
+underload and an overload factor, so the shed (admission + deadline) and
+Expired paths are exercised against the harness's exactly-once and
+bitwise-parity oracles end to end.  The harness hard-fails (SystemExit 1)
+on any oracle violation; this prog additionally asserts both shed paths
+actually fired and writes the BENCH_serve_mixed.json artifact CI uploads.
+
+    PYTHONPATH=src python tests/progs/serve_smoke.py \
+        [--out /tmp/BENCH_serve_mixed.json]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+
+def main(out):
+    import jax
+
+    from repro.core.compat import make_mesh
+
+    from benchmarks import emit, serve_load
+
+    assert jax.device_count() == 2, jax.device_count()
+    mesh = make_mesh((2,), ("data",))
+    rows = serve_load.run(bandwidths=(4, 8), fast=True,
+                          overload_factors=(0.5, 2.0), mesh=mesh,
+                          axis=("data",))
+    assert len(rows) == 2, [r["factor"] for r in rows]
+    assert all(r["mesh_devices"] == 2 for r in rows), rows
+    over = next(r for r in rows if r["factor"] >= 1.5)
+    # both shed paths fired under overload: admission (bounded queue)
+    # and deadline (organic + the forced-expiry probes)
+    assert over["shed"] > over["forced_expired"], over
+    assert over["expired"] > 0, over
+    assert over["completed"] > 0 and over["goodput_rps"] > 0, over
+    path = emit.emit_root_json(serve_load.SECTION, rows, out)
+    print(f"artifact -> {path}")
+    print("SERVE_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    import argparse
+    import pathlib
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parents[2]
+    sys.path.insert(0, str(root / "src"))
+    sys.path.insert(0, str(root))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="/tmp/BENCH_serve_mixed.json")
+    main(ap.parse_args().out)

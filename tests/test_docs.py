@@ -71,6 +71,29 @@ def test_streaming_construction_section_covers_api():
     assert not missing, f"ARCHITECTURE.md missing streaming symbols: {missing}"
 
 
+def test_serving_section_covers_api():
+    """The 'Serving tier' section must name the typed-shedding serving
+    API (each name is then resolved by test_documented_symbol_resolves,
+    so the doc and the service can't drift apart silently)."""
+    syms = set(_documented_symbols())
+    required = {
+        "repro.so3.SO3Service",
+        "repro.so3.SO3Service.submit",
+        "repro.so3.SO3Service.close",
+        "repro.so3.SO3Service.stats",
+        "repro.so3.service.ServiceError",
+        "repro.so3.service.Rejected",
+        "repro.so3.service.Expired",
+        "repro.so3.service.Cancelled",
+        "repro.so3.result_key",
+        "repro.plan.warm_bandwidths",
+        "repro.obs.counter",
+        "repro.launch.serve_so3",
+    }
+    missing = sorted(required - syms)
+    assert not missing, f"ARCHITECTURE.md missing serving symbols: {missing}"
+
+
 def test_observability_section_covers_obs_api():
     """The Observability section must name the repro.obs API (each name
     listed here is then resolved by test_documented_symbol_resolves, so

@@ -1,13 +1,18 @@
 """SO(3) correlation subsystem: S^2 transforms vs the dense oracle,
 correlation peak recovery, fused-lane structural checks, and the
-micro-batching service queue."""
+continuous-batching service tier (admission, deadlines, retries, typed
+shedding, mixed-bandwidth fuzz)."""
+import threading
+import time
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
 from repro.core import batched, quadrature, soft, wigner
 from repro.kernels import dwt_fused as dwt_fused_mod
-from repro.so3 import CorrelationEngine, SO3Service, s2
+from repro.so3 import (Cancelled, CorrelationEngine, Expired, Rejected,
+                       SO3Service, ServiceError, result_key, s2)
 from repro.so3.correlate import (angle_error as ang_err, peak_euler,
                                  random_rotation as hidden_rotation)
 from repro.so3.service import infer_bandwidth
@@ -254,14 +259,180 @@ def test_service_background_worker_smoke():
 
 
 def test_service_stop_without_drain_cancels_queued():
-    """No Future is ever left unresolved: a non-draining shutdown cancels
-    what's still queued."""
+    """No Future is ever left unresolved: close(drain=False) settles every
+    still-queued promise with a typed :class:`Cancelled` error -- a waiter
+    already blocked in ``result()`` unblocks, it never hangs on a
+    silently-dropped promise."""
     svc = SO3Service(bandwidths=(4,), lane_width=2, tk=4)
     f, g, _ = planted_pair(4, seed=70)
     fut = svc.submit(f, g)
+    got = {}
+
+    def waiter():
+        try:
+            got["res"] = fut.result(timeout=30)
+        except BaseException as e:                # noqa: BLE001 - test probe
+            got["exc"] = e
+
+    th = threading.Thread(target=waiter)
+    th.start()
     svc.stop(drain=False)
-    assert fut.cancelled()
-    assert svc.stats()["queued"] == 0
+    th.join(timeout=30)
+    assert not th.is_alive(), "waiter blocked forever on a dropped promise"
+    exc = got.get("exc")
+    assert isinstance(exc, Cancelled) and isinstance(exc, ServiceError)
+    assert (exc.seq, exc.B) == (1, 4)            # shed carries identity
+    st = svc.stats()
+    assert st["queued"] == 0 and st["cancelled"] == 1
+    assert st["resolved"] == st["submitted"] == 1
+    # admission stays shut after close; the rejection is typed too
+    with pytest.raises(Rejected, match="closed"):
+        svc.submit(f, g).result(timeout=0)
+
+
+def test_service_admission_rejects_when_queue_full():
+    """Admission control: arrivals over max_queue resolve immediately with
+    a typed Rejected error; accepted requests still serve to completion
+    and the outcome ledger balances (submitted == resolved)."""
+    svc = SO3Service(bandwidths=(4,), lane_width=2, tk=4, max_queue=2)
+    f, g, _ = planted_pair(4, seed=71)
+    futs = [svc.submit(f, g, refine=False) for _ in range(4)]
+    shed = [fu for fu in futs if fu.done()]      # rejections settle at submit
+    assert len(shed) == 2 and shed == futs[2:]   # FIFO admission
+    for fu in shed:
+        with pytest.raises(Rejected, match="queue full") as ei:
+            fu.result(timeout=0)
+        assert ei.value.B == 4
+    assert svc.drain() == 2
+    for fu in futs[:2]:
+        assert fu.result(timeout=0).index is not None
+    st = svc.stats()
+    assert st["completed"] == 2 and st["rejected"] == 2 and st["shed"] == 2
+    assert st["submitted"] == st["resolved"] == 4
+
+
+def test_service_deadline_sheds_expired_requests():
+    """A request still queued past its deadline is shed with a typed
+    Expired error and never launched; undeadlined traffic is untouched."""
+    svc = SO3Service(bandwidths=(4,), lane_width=2, tk=4)
+    f, g, _ = planted_pair(4, seed=72)
+    ok = svc.submit(f, g, refine=False)              # no deadline
+    doomed = svc.submit(f, g, refine=False, deadline_s=0.01)
+    time.sleep(0.05)
+    assert svc.drain() == 1                          # sheds aren't "served"
+    assert ok.result(timeout=0).index is not None
+    with pytest.raises(Expired, match="deadline") as ei:
+        doomed.result(timeout=0)
+    assert ei.value.B == 4
+    st = svc.stats()
+    assert st["expired"] == 1 and st["completed"] == 1 and st["shed"] == 1
+    assert st["submitted"] == st["resolved"] == 2
+
+
+def test_service_retries_failed_launch_with_backoff(monkeypatch):
+    """A transient launch failure requeues the group with backoff and the
+    retry succeeds; the retry traffic lands in stats()."""
+    svc = SO3Service(bandwidths=(4,), lane_width=2, tk=4,
+                     max_retries=1, retry_backoff_s=0.01)
+    eng = svc.engine(4)
+    real = eng.correlation_grids
+    calls = {"n": 0}
+
+    def flaky(fs, gs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected transient launch failure")
+        return real(fs, gs)
+
+    monkeypatch.setattr(eng, "correlation_grids", flaky)
+    f, g, true = planted_pair(4, seed=73)
+    fut = svc.submit(f, g)
+    assert svc.drain() == 2                  # two launch attempts, one request
+    res = fut.result(timeout=0)
+    errs = [ang_err(e, t) for e, t in zip(res.euler, true)]
+    assert all(e < 1.5 * np.pi / 4 for e in errs)
+    st = svc.stats()
+    assert st["retries"] == 1 and st["completed"] == 1 and st["failed"] == 0
+    assert calls["n"] == 2
+
+
+def test_service_surfaces_launch_error_after_retries(monkeypatch):
+    """Retries exhausted: the original launch error surfaces on the
+    Future (typed 'failed' outcome), not a hang or a swallowed error."""
+    svc = SO3Service(bandwidths=(4,), lane_width=2, tk=4,
+                     max_retries=1, retry_backoff_s=0.005)
+    eng = svc.engine(4)
+
+    def broken(fs, gs):
+        raise RuntimeError("injected permanent launch failure")
+
+    monkeypatch.setattr(eng, "correlation_grids", broken)
+    f, g, _ = planted_pair(4, seed=74)
+    fut = svc.submit(f, g)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="permanent"):
+        fut.result(timeout=0)
+    st = svc.stats()
+    assert st["failed"] == 1 and st["retries"] == 1 and st["completed"] == 0
+    assert st["submitted"] == st["resolved"] == 1
+
+
+def test_warm_bandwidths_reports_plan_cache():
+    """The plan-cache-aware scheduling hook: warm_bandwidths() reflects
+    what repro.plan has memoized, so the scheduler can prefer bandwidths
+    that dispatch without a plan build."""
+    from repro import plan as plan_mod
+    plan_mod.clear_cache()
+    assert plan_mod.warm_bandwidths() == {}
+    plan_mod.plan(4, tk=4)
+    warm = plan_mod.warm_bandwidths()
+    assert warm.get(4, 0) >= 1 and 16 not in warm
+    svc = SO3Service(bandwidths=(4, 16), lane_width=2, tk=4)
+    svc.engine(4)
+    assert svc._warm(4) and not svc._warm(16)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_service_mixed_bandwidth_fuzz_bitwise_parity(seed):
+    """Property-style fuzz (deterministic seed): a random interleaving of
+    submissions across B in {4, 8, 16} resolves every future exactly
+    once, each BITWISE-identical to direct unbatched execution of the
+    same pair (lane packing must not perturb a single ulp), while
+    stats() and the obs service.* counters stay monotone across rounds."""
+    rng = np.random.default_rng(1000 + seed)
+    Bs = (4, 8, 16)
+    svc = SO3Service(bandwidths=Bs, lane_width=2, tk=4)
+    ref = {B: CorrelationEngine(B, lane_width=1, tk=4) for B in Bs}
+    mono: dict[str, int] = {}
+
+    def check_counters_monotone():
+        for name in ("service.completed", "service.rejected",
+                     "service.expired", "service.cancelled"):
+            v = svc.obs.counter(name)
+            assert v >= mono.get(name, 0), name
+            mono[name] = v
+
+    last: dict[str, int] = {}
+    for _round in range(3):
+        jobs = []
+        for _ in range(int(rng.integers(3, 8))):
+            B = int(rng.choice(Bs))
+            f, g, _ = planted_pair(B, seed=int(rng.integers(0, 2 ** 31)))
+            refine = bool(rng.integers(0, 2))
+            jobs.append((B, f, g, refine, svc.submit(f, g, refine=refine)))
+        assert svc.drain() == len(jobs)
+        for B, f, g, refine, fut in jobs:
+            got = fut.result(timeout=0)          # exactly-once: resolved now
+            want = ref[B].match(f, g, refine=refine)
+            assert result_key(got) == result_key(want), (B, refine)
+        st = svc.stats()
+        for k in ("submitted", "resolved", "completed", "launches",
+                  "transforms"):
+            assert st[k] >= last.get(k, 0), k
+        last = st
+        check_counters_monotone()
+    assert last["submitted"] == last["resolved"] == last["completed"]
+    assert last["shed"] == last["failed"] == 0
 
 
 def test_infer_bandwidth():

@@ -66,6 +66,36 @@ def test_bf16_within_error_table_gate():
     assert 0 < rel <= bound
 
 
+@pytest.mark.parametrize("B", [8, 16, 32])
+def test_fp32_roundtrip_within_recorded_bounds(B):
+    """Accuracy-regression guard for the in-kernel f32 Wigner recurrence
+    drift (ROADMAP's fp32 accuracy cliff: ~2.2e-3 in d by l = 127 at
+    B = 128).  The measured fp32 fused roundtrip max-rel per bandwidth is
+    recorded with headroom in autotune.FP32_ROUNDTRIP_BOUNDS; a
+    recurrence/seed change that worsens the drift trips this gate instead
+    of silently degrading f32 serving accuracy."""
+    bound = autotune.FP32_ROUNDTRIP_BOUNDS[B]
+    t32 = plan_mod.plan(B, dtype=jnp.float32, impl="fused", tk=4)
+    mask = soft.coeff_mask(B)
+    worst = 0.0
+    for seed in range(3):
+        fhat = soft.random_coeffs(B, seed=seed).astype(np.complex64)
+        back = np.asarray(t32.forward(t32.inverse(fhat)))
+        err = np.abs(back - np.asarray(fhat))[mask]
+        ref = np.abs(np.asarray(fhat))[mask]
+        worst = max(worst, float((err / np.maximum(ref, 1e-300)).max()))
+    assert 0 < worst <= bound
+
+
+def test_fp32_bounds_cover_the_bf16_ladder():
+    """Every bandwidth the bf16 gate covers below paper scale also has an
+    fp32 roundtrip gate: the two tables rank the same precision-ladder
+    rungs, so a ladder extension cannot add a bf16 bound without first
+    measuring the fp32 baseline it is judged against."""
+    bf16_small = {B for B in autotune.PRECISION_ERROR_BOUNDS if B <= 128}
+    assert bf16_small <= set(autotune.FP32_ROUNDTRIP_BOUNDS)
+
+
 # ---------------------------------------------------------------------------
 # precision resolution: None never downgrades; "auto" is opt-in + dtype-gated
 # ---------------------------------------------------------------------------
